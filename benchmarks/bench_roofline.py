@@ -1,0 +1,33 @@
+"""Roofline table (DESIGN.md §9): reads the dry-run artifacts and emits the
+three terms + dominant bottleneck + useful-FLOPs ratio per cell."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import fmt_row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(mesh: str = "pod16x16") -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, f"{mesh}__*.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            rows.append(fmt_row(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                                f"FAILED:{r.get('error')}"))
+            continue
+        t = r["roofline"]
+        derived = (f"compute_s={t['compute_s']:.4g};memory_s={t['memory_s']:.4g};"
+                   f"collective_s={t['collective_s']:.4g};dom={t['dominant']};"
+                   f"useful_ratio={r['useful_flops_ratio'] or 0:.3f};"
+                   f"peak_gb={(r['memory'].get('peak_bytes') or 0) / 1e9:.2f}")
+        rows.append(fmt_row(f"roofline_{r['arch']}_{r['shape']}", 0.0, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

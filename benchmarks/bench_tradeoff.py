@@ -1,0 +1,47 @@
+"""Paper Figure 5: trade-off performance, SmartConf vs static settings.
+
+For each of the six case studies: SmartConf vs {buggy default, patched
+default, random static, hindsight-best static}.  Constraint failures are the
+paper's red crosses.  Normalization is to the best static, as in the figure.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from repro.core import simenv as se
+from .common import fmt_row, synthesize, timed_controller_us
+
+warnings.filterwarnings("ignore", category=RuntimeWarning)
+
+
+def run(seeds=(1, 2, 3)) -> list[str]:
+    rows = []
+    for name, cls in se.ALL_CASES.items():
+        env = cls()
+        pol, model, sc = synthesize(env)
+        speedups, fails = [], 0
+        for seed in seeds:
+            tr = env.evaluate(pol, seed=seed)
+            bs_val, best = env.best_static(seed=seed)
+            speedups.append(tr.total_tradeoff / max(best.total_tradeoff, 1e-9))
+            fails += tr.failed
+        buggy = env.evaluate(se.StaticPolicy(env.buggy_default), seed=1)
+        patched = env.evaluate(se.StaticPolicy(env.patched_default), seed=1)
+        rng = np.random.default_rng(0)
+        rand_conf = float(rng.choice(env.conf_grid))
+        rand = env.evaluate(se.StaticPolicy(rand_conf), seed=1)
+        us = timed_controller_us(sc, env.indirect, n=2000)
+        derived = (f"speedup_vs_best_static={np.mean(speedups):.3f};"
+                   f"sc_fail={fails}/{len(seeds)};"
+                   f"buggy_fail={buggy.failed};patched_fail={patched.failed};"
+                   f"random_static({rand_conf:.0f})_fail={rand.failed};"
+                   f"random_speedup={rand.total_tradeoff / max(env.best_static(seed=1)[1].total_tradeoff, 1e-9):.3f}")
+        rows.append(fmt_row(f"fig5_tradeoff_{name}", us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

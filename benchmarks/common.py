@@ -1,0 +1,54 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+from repro.core import fit_model
+from repro.core import simenv as se
+from repro.core.smartconf import ConfRegistry, SmartConf, SmartConfIndirect
+
+
+def synthesize(env, registry=None, controller_cls=None):
+    """Profile -> fit Eq.1 -> SmartConf object + policy (paper §5.5)."""
+    samples = env.profile(seed=0)
+    grouped = collections.defaultdict(list)
+    vals = sorted(set(c for c, _ in samples))
+    if len(vals) > 24:
+        lo, hi = min(vals), max(vals)
+        width = (hi - lo) / 16 or 1.0
+        for c, p in samples:
+            grouped[lo + (int((c - lo) / width) + 0.5) * width].append(p)
+    else:
+        for c, p in samples:
+            grouped[c].append(p)
+    confs = sorted(grouped)
+    model = fit_model(confs, [grouped[c] for c in confs],
+                      conf_min=env.conf_min, conf_max=env.conf_max,
+                      integer=env.integer)
+    registry = registry or ConfRegistry()
+    cls = SmartConfIndirect if env.indirect else SmartConf
+    sc = cls(f"bench.{env.name}", metric=env.metric_name, goal=env.goal,
+             initial=env.initial_conf(), model=model, registry=registry)
+    if controller_cls is not None:
+        sc._controller = controller_cls(model, env.goal,
+                                        env.initial_conf())
+    return se.SmartConfPolicy(sc, env.indirect), model, sc
+
+
+def timed_controller_us(sc, indirect: bool, n: int = 5000) -> float:
+    t0 = time.perf_counter()
+    for i in range(n):
+        if indirect:
+            sc.set_perf(100.0 + i % 7, 10.0 + i % 5)
+        else:
+            sc.set_perf(100.0 + i % 7)
+        sc.get_conf()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.2f},{derived}"

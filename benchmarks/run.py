@@ -1,0 +1,32 @@
+"""Benchmark runner: one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout).  Heavy model-level
+benches run on reduced configs; the full-size numbers come from the dry-run
+artifacts (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
+            exist_ok=True)
+
+
+def main() -> None:
+    from benchmarks import (bench_alternatives, bench_casestudy,
+                            bench_compression, bench_interacting,
+                            bench_overhead, bench_roofline, bench_tradeoff)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_tradeoff, bench_casestudy, bench_alternatives,
+                bench_interacting, bench_overhead, bench_compression,
+                bench_roofline):
+        for row in mod.run():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

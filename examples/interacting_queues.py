@@ -1,0 +1,44 @@
+"""Paper §6.5 / Fig. 8 demo: two PerfConfs, one hard memory constraint.
+
+A request queue (1MB items) and a response queue (1.8MB items) share a
+495MB budget.  Writes dominate first; reads join at t=50.  Both controllers
+are marked super-hard on the same metric, so SmartConf splits the error
+(N = 2) and rebalances the caps as the mix shifts — memory never crosses
+the red line.
+
+Run:  PYTHONPATH=src python examples/interacting_queues.py
+"""
+
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.bench_interacting import GOAL, TwoQueueEnv, _profile_alpha  # noqa: E402
+import dataclasses  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.core import simenv as se  # noqa: E402
+from repro.core.smartconf import ConfRegistry, SmartConfIndirect  # noqa: E402
+
+registry = ConfRegistry()
+m1 = dataclasses.replace(_profile_alpha(1.0), lam=0.06)
+m2 = dataclasses.replace(_profile_alpha(1.8), lam=0.06)
+sc1 = SmartConfIndirect("req_queue.max", metric="mem", goal=GOAL,
+                        initial=0.0, model=m1, registry=registry)
+sc2 = SmartConfIndirect("resp_queue.max", metric="mem", goal=GOAL,
+                        initial=0.0, model=m2, registry=registry)
+print(f"controllers on 'mem': N = {sc1.controller.n_interacting} "
+      f"(super-hard => error split)")
+
+env = TwoQueueEnv()
+viol, served, trace = env.run(
+    [se.SmartConfPolicy(sc1, True), se.SmartConfPolicy(sc2, True)], seed=1)
+
+for t in (10, 40, 60, 100, 200, 399):
+    print(f"t={t:3d}  mem={trace['mem'][t]:5.0f}/495MB  "
+          f"cap_req={trace['c1'][t]:5.0f} cap_resp={trace['c2'][t]:5.0f}  "
+          f"q_req={trace['q1'][t]:4.0f} q_resp={trace['q2'][t]:4.0f}")
+
+print(f"\nviolations: {viol} (hard goal held), served: {served:.0f}")
+assert viol == 0

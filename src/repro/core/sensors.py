@@ -1,0 +1,193 @@
+"""Performance sensors (paper §4.1.1: "developers must provide a sensor").
+
+The framework ships the sensors its own PerfConfs need; applications may add
+their own.  All sensors are cheap, thread-safe, and side-effect free so they
+can be polled at every control interval.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Deque
+
+import jax
+
+__all__ = [
+    "HBMAccountant",
+    "LatencySensor",
+    "ThroughputSensor",
+    "QueueGauge",
+    "StepTimer",
+    "device_live_bytes",
+]
+
+
+def device_live_bytes() -> int:
+    """Live bytes across addressable devices, from the JAX runtime when the
+    backend exposes memory stats (TPU/GPU), else from live array introspection
+    (CPU).  This is the deployment-grade sensor behind ``hbm_bytes``."""
+    total = 0
+    got_stats = False
+    for dev in jax.local_devices():
+        stats = getattr(dev, "memory_stats", lambda: None)()
+        if stats and "bytes_in_use" in stats:
+            total += stats["bytes_in_use"]
+            got_stats = True
+    if got_stats:
+        return total
+    return sum(x.nbytes for x in jax.live_arrays())
+
+
+class HBMAccountant:
+    """Named byte-ledger for device memory (weights, optimizer, KV blocks,
+    activations, queued requests).  The serve engine charges/credits it as it
+    admits requests and allocates KV blocks; the SmartConf ``hbm_bytes``
+    controllers read :meth:`total`.
+
+    On real hardware :func:`device_live_bytes` cross-checks the ledger; on the
+    CPU host the ledger *is* the measurement (DESIGN.md §2)."""
+
+    def __init__(self, budget_bytes: int | None = None) -> None:
+        self._ledger: dict[str, int] = {}
+        self._lock = threading.Lock()
+        self.budget_bytes = budget_bytes
+        self.peak_bytes = 0
+        self.violations = 0
+
+    def charge(self, name: str, nbytes: int) -> None:
+        with self._lock:
+            self._ledger[name] = self._ledger.get(name, 0) + int(nbytes)
+            tot = sum(self._ledger.values())
+            self.peak_bytes = max(self.peak_bytes, tot)
+            if self.budget_bytes is not None and tot > self.budget_bytes:
+                self.violations += 1
+
+    def credit(self, name: str, nbytes: int) -> None:
+        self.charge(name, -int(nbytes))
+
+    def set(self, name: str, nbytes: int) -> None:
+        with self._lock:
+            self._ledger[name] = int(nbytes)
+            tot = sum(self._ledger.values())
+            self.peak_bytes = max(self.peak_bytes, tot)
+            if self.budget_bytes is not None and tot > self.budget_bytes:
+                self.violations += 1
+
+    def total(self) -> int:
+        with self._lock:
+            return sum(self._ledger.values())
+
+    def breakdown(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._ledger)
+
+    def headroom(self) -> int | None:
+        if self.budget_bytes is None:
+            return None
+        return self.budget_bytes - self.total()
+
+
+class LatencySensor:
+    """Sliding-window latency sensor with mean / p50 / p99."""
+
+    def __init__(self, window: int = 512) -> None:
+        self._buf: Deque[float] = collections.deque(maxlen=window)
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._buf.append(float(seconds))
+
+    def _snapshot(self) -> list[float]:
+        with self._lock:
+            return sorted(self._buf)
+
+    def mean(self) -> float:
+        xs = self._snapshot()
+        return sum(xs) / len(xs) if xs else 0.0
+
+    def quantile(self, q: float) -> float:
+        xs = self._snapshot()
+        if not xs:
+            return 0.0
+        idx = min(int(q * len(xs)), len(xs) - 1)
+        return xs[idx]
+
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
+    def max(self) -> float:
+        xs = self._snapshot()
+        return xs[-1] if xs else 0.0
+
+
+class ThroughputSensor:
+    """Events/sec over a sliding time window."""
+
+    def __init__(self, window_seconds: float = 10.0, clock=time.monotonic) -> None:
+        self._events: Deque[tuple[float, int]] = collections.deque()
+        self.window_seconds = window_seconds
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def record(self, n: int = 1) -> None:
+        now = self._clock()
+        with self._lock:
+            self._events.append((now, n))
+            self.total += n
+            self._trim(now)
+
+    def _trim(self, now: float) -> None:
+        while self._events and self._events[0][0] < now - self.window_seconds:
+            self._events.popleft()
+
+    def rate(self) -> float:
+        now = self._clock()
+        with self._lock:
+            self._trim(now)
+            n = sum(c for _, c in self._events)
+        return n / self.window_seconds
+
+
+class QueueGauge:
+    """Instantaneous occupancy gauge for a queue (items and bytes) — the
+    deputy-variable sensor for indirect PerfConfs (paper §5.3)."""
+
+    def __init__(self) -> None:
+        self.items = 0
+        self.nbytes = 0
+        self._lock = threading.Lock()
+
+    def add(self, nbytes: int = 0) -> None:
+        with self._lock:
+            self.items += 1
+            self.nbytes += int(nbytes)
+
+    def remove(self, nbytes: int = 0) -> None:
+        with self._lock:
+            self.items -= 1
+            self.nbytes -= int(nbytes)
+
+
+class StepTimer:
+    """Per-step wall-clock timer for the trainer (drives the checkpoint
+    overhead controller and straggler detection)."""
+
+    def __init__(self, window: int = 128) -> None:
+        self.latency = LatencySensor(window)
+        self._start: float | None = None
+
+    def __enter__(self) -> "StepTimer":
+        self._start = time.monotonic()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._start is not None:
+            self.latency.record(time.monotonic() - self._start)
+            self._start = None
+
+    def mean(self) -> float:
+        return self.latency.mean()

@@ -1,0 +1,3 @@
+from .pipeline import PrefetchPipeline, SyntheticTokens
+
+__all__ = ["PrefetchPipeline", "SyntheticTokens"]

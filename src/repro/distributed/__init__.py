@@ -1,0 +1,3 @@
+from . import collectives, fault_tolerance, sharding
+
+__all__ = ["collectives", "fault_tolerance", "sharding"]

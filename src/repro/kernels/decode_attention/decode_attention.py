@@ -1,0 +1,111 @@
+"""Pallas TPU decode-attention kernel: one query token against a long KV
+cache (flash-decoding style).
+
+Grid = (batch, kv_heads, kv_blocks), kv innermost/sequential; the (m, l, acc)
+online-softmax state lives in VMEM scratch.  The query block holds the G =
+H/Kv query heads that share one KV head, so GQA needs no KV repetition.
+Cache slots carry their absolute position (`k_pos`); slots that are empty
+(pos < 0), in the future (pos > q_pos), or outside the sliding window are
+masked — exactly the ring-cache semantics of ``models.blocks``.
+
+The same per-shard (m, l, acc) math backs the sequence-parallel distributed
+decode path (DESIGN.md §6): each shard runs this kernel over its KV slice and
+the partial results combine with a 3-float logsumexp reduction per head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, window: int, block_kv: int):
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [G, d]
+    k = k_ref[0, 0].astype(jnp.float32)           # [bkv, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    k_pos = kpos_ref[0]                           # [bkv]
+    q_pos = qpos_ref[0]                           # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= q.shape[-1] ** -0.5                      # [G, bkv]
+
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window > 0:
+        valid &= (q_pos - k_pos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(valid[None, :], jnp.exp(s - m_cur[:, None]), 0.0)
+    l_cur = alpha * l_scr[:, 0] + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_cur[:, None], l_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.where(l_scr[:, 0] == 0.0, 1.0, l_scr[:, 0])
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_pos: jax.Array, q_pos: jax.Array, *,
+                     window: int = 0, block_kv: int = DEFAULT_BLOCK_KV,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, Kv, S, D]; k_pos: [B, S]; q_pos: [B] ->
+    [B, H, D]."""
+    b, h, d = q.shape
+    kv_heads, s = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    block_kv = min(block_kv, s)
+    pad = (-s) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    sp = s + pad
+    qg = q.reshape(b, kv_heads, g, d)
+    q_pos = q_pos.astype(jnp.int32).reshape(b, 1)
+
+    grid = (b, kv_heads, sp // block_kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, block_kv), lambda b_, h_, ki: (b_, ki)),
+            pl.BlockSpec((1, 1), lambda b_, h_, ki: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv_heads, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, k_pos, q_pos)
+    return out.reshape(b, h, d)

@@ -1,0 +1,17 @@
+"""Jitted wrapper with backend dispatch (pallas on TPU, XLA elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention
+from .ref import decode_attention_ref
+
+
+def decode_attention_op(q, k, v, k_pos, q_pos, *, window: int = 0,
+                        force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if mode == "xla":
+        return decode_attention_ref(q, k, v, k_pos, q_pos, window=window)
+    return decode_attention(q, k, v, k_pos, q_pos, window=window,
+                            interpret=(mode == "pallas_interpret"))

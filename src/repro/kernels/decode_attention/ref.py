@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, k_pos, q_pos, *, window: int = 0):
+    """q: [B,H,D]; k,v: [B,Kv,S,D]; k_pos [B,S]; q_pos [B] -> [B,H,D]."""
+    b, h, d = q.shape
+    kv_heads = k.shape[1]
+    if kv_heads != h:
+        k = jnp.repeat(k, h // kv_heads, axis=1)
+        v = jnp.repeat(v, h // kv_heads, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window > 0:
+        valid &= (q_pos[:, None] - k_pos) < window
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

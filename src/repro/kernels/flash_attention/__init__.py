@@ -1,0 +1,8 @@
+from .flash_attention import flash_attention, flash_attention_fwd_lse
+from .flash_attention_bwd import flash_attention_bwd
+from .ops import attention_op
+from .ref import attention_ref
+from .vjp import flash_attention_grad
+
+__all__ = ["flash_attention", "flash_attention_fwd_lse", "flash_attention_bwd",
+           "flash_attention_grad", "attention_op", "attention_ref"]

@@ -1,0 +1,182 @@
+"""Pallas TPU flash-attention forward kernel (causal / sliding-window / GQA).
+
+Canonical TPU schedule: grid = (batch, q_heads, q_blocks, kv_blocks) with the
+kv dimension innermost — TPU grids execute sequentially, so the online-softmax
+accumulators (m, l, acc) live in VMEM scratch and persist across kv steps:
+
+    @ kv == 0:            init scratch
+    each kv block:        s = q k^T (MXU), online-softmax update (VPU)
+    @ kv == last:         out = acc / l
+
+BlockSpecs stream one [block_q, head_dim] query tile and [block_kv, head_dim]
+K/V tiles HBM->VMEM per step; GQA maps query head h to KV head h // group in
+the K/V index_map so repeated KV never materializes.  block sizes are MXU
+aligned (multiples of 128 where the head_dim allows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, block_q: int, block_kv: int,
+            seq_len: int, lse_ref=None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bkv, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= q_ref.shape[-1] ** -0.5                   # [bq, bkv]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]                           # [bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_cur = alpha * l_scr[:, 0] + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_cur[:, None], l_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.where(l_scr[:, 0] == 0.0, 1.0, l_scr[:, 0])
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+            lse_ref[0, 0] = lse.astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, S, D]; k, v: [B, Kv, S, D] -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    kv_heads = k.shape[1]
+    group = h // kv_heads
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    pad_q = (-s) % block_q
+    pad_kv = (-s) % block_kv
+    if pad_q or pad_kv:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sq, skv = s + pad_q, s + pad_kv
+
+    grid = (b, h, sq // block_q, skv // block_kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # m
+            pltpu.VMEM((block_q, 128), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]
+
+
+def _kernel_with_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
+                     acc_scr, **kw):
+    _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            lse_ref=lse_ref, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_fwd_lse(q, k, v, *, causal=True, window=0,
+                            block_q=DEFAULT_BLOCK_Q,
+                            block_kv=DEFAULT_BLOCK_KV, interpret=False):
+    """Forward that also emits the logsumexp residual [B, H, S, 128-lane]
+    needed by the backward kernels (custom_vjp path)."""
+    b, h, s, d = q.shape
+    kv_heads = k.shape[1]
+    group = h // kv_heads
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    pad_q = (-s) % block_q
+    pad_kv = (-s) % block_kv
+    if pad_q or pad_kv:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sq, skv = s + pad_q, s + pad_kv
+
+    grid = (b, h, sq // block_q, skv // block_kv)
+    o, lse = pl.pallas_call(
+        functools.partial(_kernel_with_lse, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 128),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq, 128), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o[:, :, :s, :], lse[:, :, :s, 0]

@@ -1,0 +1,199 @@
+"""Pallas TPU flash-attention BACKWARD kernels + custom_vjp wrapper.
+
+Standard two-kernel formulation (FlashAttention v2 style), recomputing the
+probability tiles from (q, k, lse) instead of reading stored scores:
+
+    L_i  = logsumexp_j(s_ij)                 (saved by the forward kernel)
+    D_i  = rowsum(dO_i * O_i)
+    P_ij = exp(s_ij - L_i)
+    dV_j = sum_i P_ij^T dO_i
+    dS   = P * (dO V^T - D_i)
+    dQ_i = scale * sum_j dS_ij K_j           (kernel A: kv innermost, dq scratch)
+    dK_j = scale * sum_i dS_ij^T Q_i         (kernel B: q innermost, dk/dv scratch)
+
+Grids are TPU-sequential so the accumulators persist in VMEM scratch.  GQA
+is handled by computing per-query-head dK/dV and group-summing outside the
+kernel (correctness-first; fusing the group sum into kernel B is the next
+perf step).  ``flash_attention_vjp`` wires these into jax.custom_vjp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, NEG_INF
+
+
+def _mask(qi, ki, bq, bkv, *, causal, window, seq_len, shape):
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    ok = k_pos < seq_len
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    return ok
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
+               acc_scr, *, causal, window, block_q, block_kv, seq_len, scale):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)      # [bq, 128] broadcast cols
+    dsum = dsum_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = _mask(qi, ki, block_q, block_kv, causal=causal, window=window,
+               seq_len=seq_len, shape=s.shape)
+    p = jnp.where(ok, jnp.exp(s - lse[:, :1]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum[:, :1])
+    acc_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        dq_ref[0, 0] = (acc_scr[...] * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, causal, window,
+                block_q, block_kv, seq_len, scale):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    n_q = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    dsum = dsum_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = _mask(qi, ki, block_q, block_kv, causal=causal, window=window,
+               seq_len=seq_len, shape=s.shape)
+    p = jnp.where(ok, jnp.exp(s - lse[:, :1]), 0.0)      # [bq, bkv]
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum[:, :1])
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _done():
+        dk_ref[0, 0] = (dk_scr[...] * scale).astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=0,
+                        block_q=DEFAULT_BLOCK_Q, block_kv=DEFAULT_BLOCK_KV,
+                        interpret=False):
+    """q,o,do: [B,H,S,D]; k,v: [B,Kv,S,D]; lse: [B,H,S].
+    Returns (dq [B,H,S,D], dk [B,Kv,S,D], dv [B,Kv,S,D])."""
+    b, h, s, d = q.shape
+    kv_heads = k.shape[1]
+    g = h // kv_heads
+    scale = d ** -0.5
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    sq = s + (-s) % block_q
+    skv = s + (-s) % block_kv
+    sp = max(sq, skv)
+
+    qp = _pad_to(q, sp, 2)
+    kp = _pad_to(jnp.repeat(k, g, axis=1), sp, 2)
+    vp = _pad_to(jnp.repeat(v, g, axis=1), sp, 2)
+    dop = _pad_to(do, sp, 2)
+    # per-row logsumexp and D = rowsum(dO * O), laid out [B,H,S,128] lanes
+    dsum = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    lse_l = _pad_to(jnp.broadcast_to(lse[..., None], (b, h, s, 128)), sp, 2)
+    dsum_l = _pad_to(jnp.broadcast_to(dsum[..., None], (b, h, s, 128)), sp, 2)
+
+    common = dict(causal=causal, window=window, block_q=block_q,
+                  block_kv=block_kv, seq_len=s, scale=scale)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_, ki, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_, ki, 0)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_q, 128), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_q, 128), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+    ]
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid=(b, h, sp // block_q, sp // block_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lse_l, dsum_l)[:, :, :s, :]
+
+    # kernel B: note grid order (kv outer, q inner/sequential)
+    in_specs_b = [
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, ki, qi: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, ki, qi: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_q, 128), lambda b_, h_, ki, qi: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_q, 128), lambda b_, h_, ki, qi: (b_, h_, qi, 0)),
+    ]
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **common),
+        grid=(b, h, sp // block_kv, sp // block_q),
+        in_specs=in_specs_b,
+        out_specs=[
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sp, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sp, d), q.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
+                        pltpu.VMEM((block_kv, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lse_l, dsum_l)
+    dk = dk[:, :, :s, :].reshape(b, kv_heads, g, s, d).sum(axis=2)
+    dv = dv[:, :, :s, :].reshape(b, kv_heads, g, s, d).sum(axis=2)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)

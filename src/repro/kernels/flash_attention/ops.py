@@ -1,0 +1,31 @@
+"""Jitted wrapper: picks the Pallas kernel on TPU, the exact XLA chunked path
+elsewhere (and in dry-runs so GSPMD sees plain einsums)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool = True, window: int = 0,
+                 force: str | None = None) -> jax.Array:
+    """q: [B,S,H,D]; k,v: [B,S,Kv,D] (model layout).  force: None|'pallas'|
+    'pallas_interpret'|'xla'."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    mode = force or ("pallas" if _on_tpu() else "xla")
+    if mode == "xla":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              interpret=(mode == "pallas_interpret"))
+    return jnp.swapaxes(out, 1, 2)

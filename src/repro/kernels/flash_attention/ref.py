@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (same [B,H,S,D] layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [B,H,S,D]; k,v: [B,Kv,S,D]."""
+    b, h, s, d = q.shape
+    kv_heads = k.shape[1]
+    if kv_heads != h:
+        k = jnp.repeat(k, h // kv_heads, axis=1)
+        v = jnp.repeat(v, h // kv_heads, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

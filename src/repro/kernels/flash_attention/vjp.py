@@ -1,0 +1,35 @@
+"""Differentiable flash attention: custom_vjp over the Pallas fwd/bwd
+kernels (scores never materialize in either pass)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_fwd_lse
+from .flash_attention_bwd import flash_attention_bwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_grad(q, k, v, causal=True, window=0, interpret=False):
+    """q: [B,H,S,D]; k,v: [B,Kv,S,D] -> [B,H,S,D], differentiable."""
+    o, _ = flash_attention_fwd_lse(q, k, v, causal=causal, window=window,
+                                   interpret=interpret)
+    return o
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    o, lse = flash_attention_fwd_lse(q, k, v, causal=causal, window=window,
+                                     interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, window, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     window=window, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention_grad.defvjp(_fwd, _bwd)

@@ -1,0 +1,5 @@
+from .ops import rglru_op
+from .ref import rglru_ref
+from .rglru import rglru_scan
+
+__all__ = ["rglru_op", "rglru_ref", "rglru_scan"]

@@ -1,0 +1,15 @@
+"""Backend dispatch for the RG-LRU scan."""
+
+from __future__ import annotations
+
+import jax
+
+from .ref import rglru_ref
+from .rglru import rglru_scan
+
+
+def rglru_op(log_a, b, *, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if mode == "xla":
+        return rglru_ref(log_a, b)
+    return rglru_scan(log_a, b, interpret=(mode == "pallas_interpret"))

@@ -1,0 +1,20 @@
+"""Naive scan oracle for the RG-LRU recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, b):
+    """log_a, b: [B, S, F] -> h [B, S, F], h_{-1} = 0."""
+
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la.astype(jnp.float32)) * h + bb.astype(jnp.float32)
+        return h, h
+
+    h0 = jnp.zeros(log_a.shape[::2], jnp.float32)  # [B, F]
+    xs = (jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(b, 1, 0))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)

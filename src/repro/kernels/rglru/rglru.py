@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the RG-LRU diagonal linear recurrence.
+
+    h_t = exp(log_a_t) * h_{t-1} + b_t
+
+Grid = (batch, feature_blocks, time_chunks) with time innermost/sequential;
+the carried hidden state for the current (batch, feature-block) persists in
+VMEM scratch.  Within a chunk the recurrence unrolls as a fori_loop over
+rows — each step is a fused VPU multiply-add over the feature block, with all
+chunk data resident in VMEM (one HBM read per element, the minimum).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+BLOCK_F = 512
+
+
+def _kernel(loga_ref, b_ref, h_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    log_a = loga_ref[0].astype(jnp.float32)    # [L, F]
+    b = b_ref[0].astype(jnp.float32)           # [L, F]
+
+    def step(t, carry):
+        h, out = carry
+        h = jnp.exp(log_a[t]) * h + b[t]
+        out = jax.lax.dynamic_update_index_in_dim(out, h, t, 0)
+        return h, out
+
+    h0 = h_scr[0]
+    out0 = jnp.zeros_like(b)
+    h_fin, out = jax.lax.fori_loop(0, chunk, step, (h0, out0))
+    h_scr[...] = h_fin[None, :]
+    h_ref[0] = out.astype(h_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_f", "interpret"))
+def rglru_scan(log_a: jax.Array, b: jax.Array, *, chunk: int = CHUNK,
+               block_f: int = BLOCK_F, interpret: bool = False) -> jax.Array:
+    """log_a, b: [B, S, F] -> h: [B, S, F] with h_0 = b_0 (zero init)."""
+    bsz, s, f = log_a.shape
+    chunk = min(chunk, s)
+    block_f = min(block_f, f)
+    assert s % chunk == 0 and f % block_f == 0
+    grid = (bsz, f // block_f, s // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_f), lambda b_, fi, ci: (b_, ci, fi)),
+            pl.BlockSpec((1, chunk, block_f), lambda b_, fi, ci: (b_, ci, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_f),
+                               lambda b_, fi, ci: (b_, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, f), b.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_f), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b)
+    return out

@@ -1,0 +1,5 @@
+from .ops import rwkv6_op
+from .ref import rwkv6_ref
+from .rwkv6 import rwkv6_scan
+
+__all__ = ["rwkv6_op", "rwkv6_ref", "rwkv6_scan"]

@@ -1,0 +1,16 @@
+"""Backend dispatch for the RWKV6 time-mix core."""
+
+from __future__ import annotations
+
+import jax
+
+from .ref import rwkv6_ref
+from .rwkv6 import rwkv6_scan
+
+
+def rwkv6_op(r, k, v, logw, u, *, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if mode == "xla":
+        return rwkv6_ref(r, k, v, logw, u)
+    return rwkv6_scan(r, k, v, logw, u,
+                      interpret=(mode == "pallas_interpret"))

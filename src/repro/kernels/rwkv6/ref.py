@@ -1,0 +1,24 @@
+"""Naive per-token RWKV-6 recurrence — the oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: [BH, S, N]; u: [BH, N] -> y [BH, S, N]."""
+    bh, s, n = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp                       # [BH, N]
+        w_t = jnp.exp(lw_t.astype(jnp.float32))
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [BH, N, N]
+        y = jnp.einsum("bi,bij->bj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, logw))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

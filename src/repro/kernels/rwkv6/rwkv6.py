@@ -1,0 +1,103 @@
+"""Pallas TPU kernel for the RWKV-6 chunked recurrence (time mix core).
+
+Grid = (batch * heads, time_chunks), chunks innermost/sequential; the running
+state matrix S [N, N] persists in VMEM scratch across chunk steps.  Per chunk
+of length L the kernel computes (all f32 in VMEM):
+
+    cum_t   = cumsum(log w)                      [L, N]
+    y_intra = r_t . sum_{s<t} exp(cum_t - cum_s) k_s v_s^T   (strict lower)
+    y_diag  = (r_t * u * k_t) . v_t
+    y_cross = (r_t * exp(cum_t)) @ S
+    S'      = diag(exp(cum_L)) S + sum_s exp(cum_L - cum_s) (k_s o v_s)
+
+which is exactly ``models.rwkv6.time_mix_chunked``'s math; the oracle in
+``ref.py`` is the naive per-token recurrence both are tested against.
+
+The intra-chunk term contracts over (s, i) per output channel j; with L = 32
+and N = 64 the working set is MXU/VPU friendly and S stays resident, so HBM
+traffic is just the r/k/v/w chunk streams — the operational-intensity win the
+chunked schedule exists for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+HEAD_DIM = 64
+CHUNK = 32
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)       # [L, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = w_ref[0].astype(jnp.float32)      # log decay, [L, N]
+    u = u_ref[0].astype(jnp.float32)       # [1, N] bonus
+
+    cum = jnp.cumsum(lw, axis=0)           # [L, N] inclusive: sum_{u<=t} lw_u
+    ecum = cum - lw                        # exclusive: sum_{u<t} lw_u
+    A = jnp.exp(ecum)                      # decay applied to the r-side read
+    A_total = jnp.exp(cum[-1])             # [N]
+
+    # D[t, s, :] = prod_{s<u<t} w_u = exp(ecum_t - cum_s), strictly lower
+    ct = ecum[:, None, :]
+    cs = cum[None, :, :]
+    strict = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    D = jnp.where(strict[:, :, None], jnp.exp(ct - cs), 0.0)   # [L, L, N]
+
+    # y_intra[t, j] = sum_s sum_i r[t,i] D[t,s,i] k[s,i] v[s,j]
+    scores = jnp.einsum("ti,tsi,si->ts", r, D, k)              # [L, L]
+    y_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_diag = jnp.sum(r * u * k, axis=1, keepdims=True) * v     # [L, N]
+    y_cross = jax.lax.dot_general(r * A, s_scr[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    decay_k = jnp.exp(cum[-1][None, :] - cum) * k              # [L, N]
+    s_scr[...] = A_total[:, None] * s_scr[...] + jax.lax.dot_general(
+        decay_k, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_diag + y_cross).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+               u: jax.Array, *, chunk: int = CHUNK,
+               interpret: bool = False) -> jax.Array:
+    """r,k,v,logw: [BH, S, N]; u: [BH, N] -> y [BH, S, N].
+
+    BH = batch * heads flattened; S must be a multiple of ``chunk``."""
+    bh, s, n = r.shape
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    grid = (bh, s // chunk)
+    u2 = u[:, None, :]
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, n), r.dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u2)
+    return out

@@ -1,0 +1,232 @@
+"""Per-layer blocks: init / apply / cache, dispatched on block *kind*.
+
+Kinds (``ArchConfig.block_pattern`` entries):
+  ``full``    causal full attention + FFN
+  ``swa``     sliding-window attention (window = cfg.window)
+  ``local``   same as swa (gemma3 local layers; ring KV cache)
+  ``global``  full attention with the long-context rope theta (gemma3)
+  ``bidir``   bidirectional attention (whisper encoder)
+  ``rwkv6``   RWKV-6 time mix + channel mix (attention-free)
+  ``rglru``   RG-LRU recurrent block + FFN (recurrentgemma)
+A ``+moe`` suffix swaps the dense FFN for the MoE layer (e.g. ``full+moe``).
+
+Every apply works in two modes:
+  * full-seq (train / prefill): x [B,S,d]; optionally writes a decode cache.
+  * step (decode): x [B,1,d] against the cache.
+Caches are dict pytrees; attention caches hold (k, v, pos) with ring
+semantics for windowed kinds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import A, shard
+from . import layers, moe as moe_lib, rglru as rglru_lib, rwkv6 as rwkv6_lib
+from .layers import apply_norm, norm_init
+
+ATTN_KINDS = ("full", "swa", "local", "global", "bidir")
+
+
+def split_kind(kind: str) -> tuple[str, bool]:
+    if kind.endswith("+moe"):
+        return kind[:-4], True
+    return kind, False
+
+
+def block_init(key, cfg, kind: str) -> tuple[dict, dict]:
+    base, is_moe = split_kind(kind)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params: dict = {}
+    axes: dict = {}
+    params["ln1"], axes["ln1"] = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+    if base in ATTN_KINDS:
+        params["attn"], axes["attn"] = layers.attention_init(k1, cfg)
+    elif base == "rwkv6":
+        params["tm_cm"], axes["tm_cm"] = rwkv6_lib.rwkv6_init(k1, cfg)
+        params["ln2"], axes["ln2"] = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+        return params, axes          # rwkv6 block has its own channel mix
+    elif base == "rglru":
+        params["rglru"], axes["rglru"] = rglru_lib.rglru_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    params["ln2"], axes["ln2"] = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+    if is_moe:
+        params["moe"], axes["moe"] = moe_lib.moe_init(k2, cfg)
+    else:
+        params["mlp"], axes["mlp"] = layers.mlp_init(
+            k2, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.dtype)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def cache_len_for(cfg, kind: str, seq_len: int) -> int:
+    base, _ = split_kind(kind)
+    if base in ("swa", "local"):
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def block_cache_init(cfg, kind: str, batch: int, seq_len: int):
+    base, _ = split_kind(kind)
+    if base in ATTN_KINDS:
+        n = cache_len_for(cfg, kind, seq_len)
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, n, cfg.num_kv_heads, hd), cfg.dtype),
+            "v": jnp.zeros((batch, n, cfg.num_kv_heads, hd), cfg.dtype),
+            "pos": jnp.full((batch, n), -1, jnp.int32),
+        }
+    if base == "rwkv6":
+        return rwkv6_lib.init_state(cfg, batch)
+    if base == "rglru":
+        st = rglru_lib.init_state(cfg, batch)
+        st["x_ln"] = jnp.zeros((batch, 0), cfg.dtype)  # placeholder, unused
+        return st
+    raise ValueError(kind)
+
+
+def _theta(cfg, base: str) -> float:
+    if base == "global" and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# apply: full sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_seq(cfg, kind: str, params: dict, x: jax.Array,
+                    positions: jax.Array, cache=None):
+    """x: [B,S,d]; positions: [S] absolute.  If ``cache`` is given (prefill),
+    the computed K/V (or recurrent state) is written into it.
+    Returns (x, cache, aux)."""
+    base, is_moe = split_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+
+    if base == "rwkv6":
+        p = params["tm_cm"]
+        st = cache if cache is not None else rwkv6_lib.init_state(cfg, x.shape[0])
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        y, S_new, tm_last = rwkv6_lib.time_mix_chunked(p, h, st["S"], st["tm_last"])
+        x = x + y
+        h2 = apply_norm(cfg.norm, params["ln2"], x)
+        cm_out, cm_last = rwkv6_lib.channel_mix(p, h2, st["cm_last"])
+        x = x + cm_out
+        new_cache = {"S": S_new, "tm_last": tm_last, "cm_last": cm_last}
+        return x, (new_cache if cache is not None else None), aux
+
+    if base == "rglru":
+        st = cache if cache is not None else rglru_lib.init_state(cfg, x.shape[0])
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        y, st_new = rglru_lib.rglru_block(params["rglru"], h, st)
+        x = x + y
+    else:
+        theta = _theta(cfg, base)
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        q = layers.attn_project_q(params["attn"], h, positions=positions,
+                                  theta=theta)
+        k, v = layers.attn_project_kv(params["attn"], h, positions=positions,
+                                      theta=theta)
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        window = cfg.window if base in ("swa", "local") else 0
+        causal = base != "bidir"
+        o = layers.attention(q, k, v, q_pos=positions, k_pos=positions,
+                             causal=causal, window=window)
+        x = x + layers.attn_output(params["attn"], o)
+        if cache is not None:
+            cache = _write_cache(cache, k, v, positions)
+        st_new = None
+
+    h2 = apply_norm(cfg.norm, params["ln2"], x)
+    if is_moe:
+        y, aux = moe_lib.moe_apply_ep(params["moe"], h2, cfg, return_aux=True)
+    else:
+        y = layers.mlp(params["mlp"], h2, cfg.mlp)
+    x = x + y
+    x = shard(x, "batch", "seq", "embed")
+    new_cache = st_new if base == "rglru" else cache
+    return x, new_cache, aux
+
+
+def _write_cache(cache, k, v, positions):
+    """Write full-seq K/V into a (possibly ring) cache."""
+    n = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= n:  # keep the last n entries, ring-indexed
+        k_tail, v_tail = k[:, -n:], v[:, -n:]
+        pos_tail = positions[-n:]
+        slots = (pos_tail % n).astype(jnp.int32)
+        order = jnp.argsort(slots)
+        return {
+            "k": k_tail[:, order],
+            "v": v_tail[:, order],
+            "pos": jnp.broadcast_to(pos_tail[order], (k.shape[0], n)),
+        }
+    kc = cache["k"].at[:, :s].set(k)
+    vc = cache["v"].at[:, :s].set(v)
+    pc = cache["pos"].at[:, :s].set(jnp.broadcast_to(positions, (k.shape[0], s)))
+    return {"k": kc, "v": vc, "pos": pc}
+
+
+# ---------------------------------------------------------------------------
+# apply: single decode step
+# ---------------------------------------------------------------------------
+
+
+def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
+                     pos: jax.Array, cache: dict):
+    """x: [B,1,d]; pos: [B] absolute position of this token."""
+    base, is_moe = split_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+
+    if base == "rwkv6":
+        p = params["tm_cm"]
+        h = apply_norm(cfg.norm, params["ln1"], x)[:, 0]
+        y, S_new, tm_last = rwkv6_lib.time_mix_step(p, h, cache["S"], cache["tm_last"])
+        x = x + y[:, None, :]
+        h2 = apply_norm(cfg.norm, params["ln2"], x)[:, 0]
+        cm_out, cm_last = rwkv6_lib.channel_mix(p, h2, cache["cm_last"])
+        x = x + cm_out[:, None, :]
+        return x, {"S": S_new, "tm_last": tm_last, "cm_last": cm_last}, aux
+
+    if base == "rglru":
+        h = apply_norm(cfg.norm, params["ln1"], x)[:, 0]
+        y, st_new = rglru_lib.rglru_step(params["rglru"], h, cache)
+        x = x + y[:, None, :]
+        new_cache = st_new
+    else:
+        theta = _theta(cfg, base)
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        pos2d = pos[:, None]                                  # [B,1]
+        q = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"]),
+                        pos2d, theta)
+        k_t = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
+                          pos2d, theta)
+        v_t = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
+        n = cache["k"].shape[1]
+        slot = (pos % n).astype(jnp.int32)                    # ring or direct
+        bidx = jnp.arange(x.shape[0])
+        kc = cache["k"].at[bidx, slot].set(k_t[:, 0])
+        vc = cache["v"].at[bidx, slot].set(v_t[:, 0])
+        pc = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        window = cfg.window if base in ("swa", "local") else 0
+        o = layers.decode_attention(q, kc, vc, k_pos=pc, q_pos=pos,
+                                    window=window)
+        x = x + layers.attn_output(params["attn"], o)
+        new_cache = {"k": kc, "v": vc, "pos": pc}
+
+    h2 = apply_norm(cfg.norm, params["ln2"], x)
+    if is_moe:
+        y = moe_lib.moe_apply_ep_serve(params["moe"], h2, cfg)
+    else:
+        y = layers.mlp(params["mlp"], h2, cfg.mlp)
+    x = x + y
+    return x, new_cache, aux

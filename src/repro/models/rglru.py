@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin, arXiv:2402.19427) — RecurrentGemma's
+recurrent unit, paired 2:1 with local attention.
+
+    r_t = sigmoid(x W_a + b_a)            # recurrence gate
+    i_t = sigmoid(x W_x + b_x)            # input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))   # a^{c r_t}, a = sigmoid(Lambda)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal-linear, so training/prefill uses
+``jax.lax.associative_scan`` (parallel prefix, log-depth) — the TPU-friendly
+formulation; decode is the O(1) per-token step.  The block wraps the RG-LRU
+with the Griffin recipe: linear in, short causal conv, gated GeLU branch,
+linear out.  ``repro.kernels.rglru`` holds the Pallas twin of the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import A, shard
+from .layers import _dense_init
+
+CONV_WIDTH = 4
+C_FACTOR = 8.0
+
+
+def rglru_init(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    dr = cfg.num_heads * cfg.resolved_head_dim   # recurrent width
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_in": _dense_init(ks[0], (d, dr), cfg.dtype),
+        "w_gate_branch": _dense_init(ks[1], (d, dr), cfg.dtype),
+        "conv_w": _dense_init(ks[2], (CONV_WIDTH, dr), cfg.dtype),
+        "wa": _dense_init(ks[3], (dr, dr), cfg.dtype),
+        "wx": _dense_init(ks[4], (dr, dr), cfg.dtype),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "bx": jnp.zeros((dr,), jnp.float32),
+        "lam": jnp.full((dr,), 3.0, jnp.float32),   # sigmoid(3) ~ 0.95 decay
+        "w_out": _dense_init(ks[5], (dr, d), cfg.dtype),
+    }
+    axes = {
+        "w_in": A("embed", "ff"), "w_gate_branch": A("embed", "ff"),
+        "conv_w": A(None, "ff"),
+        "wa": A("ff", None), "wx": A("ff", None),
+        "ba": A("embed"), "bx": A("embed"), "lam": A("embed"),
+        "w_out": A("ff", "embed"),
+    }
+    return params, axes
+
+
+def _gates(params, u):
+    """u: [..., dr] -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid((u @ params["wa"]).astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid((u @ params["wx"]).astype(jnp.float32) + params["bx"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r      # log a_t < 0
+    a2 = jnp.exp(2.0 * log_a)
+    scaled_in = jnp.sqrt(jnp.clip(1.0 - a2, 1e-9)) * (i * u.astype(jnp.float32))
+    return log_a, scaled_in
+
+
+def _conv(params, u, conv_state):
+    """short causal conv along time.  u: [B,S,dr]; conv_state [B,W-1,dr]."""
+    x = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    w = params["conv_w"]
+    out = sum(x[:, i:i + u.shape[1], :] * w[i] for i in range(CONV_WIDTH))
+    return out, x[:, -(CONV_WIDTH - 1):, :]
+
+
+def rglru_block(params, x, state):
+    """x: [B,S,d]; state dict {h:[B,dr], conv:[B,W-1,dr]}."""
+    u = x @ params["w_in"]
+    u = shard(u, "batch", "seq", "ff")
+    u, conv_state = _conv(params, u, state["conv"])
+    log_a, inp = _gates(params, u)
+    # parallel prefix over the diagonal-linear recurrence
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+    # seed the scan with the carried state at t = -1
+    log_a_seq = jnp.concatenate(
+        [jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+    inp_seq = jnp.concatenate(
+        [state["h"].astype(jnp.float32)[:, None, :], inp], axis=1)
+    _, h_all = jax.lax.associative_scan(combine, (log_a_seq, inp_seq), axis=1)
+    h = h_all[:, 1:, :]
+    new_state = {"h": h[:, -1, :], "conv": conv_state}
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype) @ params["w_out"]
+    return y, new_state
+
+
+def rglru_step(params, x_t, state):
+    """One decode token.  x_t: [B,d]."""
+    u = x_t @ params["w_in"]
+    # conv state: [B, W-1, dr] holds the last W-1 inputs
+    xs = jnp.concatenate([state["conv"].astype(u.dtype), u[:, None, :]], axis=1)
+    w = params["conv_w"]
+    u_conv = sum(xs[:, i, :] * w[i] for i in range(CONV_WIDTH))
+    log_a, inp = _gates(params, u_conv)
+    h = jnp.exp(log_a) * state["h"].astype(jnp.float32) + inp
+    new_state = {"h": h, "conv": xs[:, 1:, :]}
+    gate = jax.nn.gelu((x_t @ params["w_gate_branch"]).astype(jnp.float32))
+    y = (h * gate).astype(x_t.dtype) @ params["w_out"]
+    return y, new_state
+
+
+def init_state(cfg, batch: int):
+    dr = cfg.num_heads * cfg.resolved_head_dim
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), jnp.float32),
+    }

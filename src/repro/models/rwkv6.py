@@ -1,0 +1,200 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free time mix with
+*data-dependent decay* plus channel mix.
+
+State per head: S in R^{N x N} (N = head dim, 64).  Per-token recurrence:
+
+    S_t[i, j] = w_t[i] * S_{t-1}[i, j] + k_t[i] * v_t[j]
+    y_t[j]    = sum_i r_t[i] * (S_{t-1}[i, j] + u[i] * k_t[i] * v_t[j])
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) the Finch data-dependent decay.
+
+Training/prefill uses the standard **chunked** formulation (the recurrence is
+diagonal-linear in S, so a chunk's contribution factorizes through cumulative
+log-decays): per chunk of length L we build the per-channel decay kernel
+D[t, s, i] = prod_{s<u<=t} w_u[i] and contract
+
+    y_intra = einsum('lti,tsi,si,sj->lj'-style within the chunk,
+    y_cross = (r_t * A_t) @ S_in,     A_t = prod_{u<=t} w_u
+    S_out   = diag(A_L) S_in + sum_s (A_L / A_s) k_s^T v_s
+
+then lax.scan over chunks carries S — O(S * L * N^2) FLOPs, O(N^2) state.
+``repro.kernels.rwkv6`` implements the same schedule as a Pallas kernel.
+
+Decode is the plain one-token recurrence (O(1) state — this is why rwkv6-7b
+runs the long_500k shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import A, shard
+from .layers import _dense_init
+
+HEAD_DIM = 64
+LORA_DIM = 64
+CHUNK = 32  # intra-chunk decay kernel D is O(B*L^2*d) — keep L modest
+
+
+def rwkv6_init(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    h = d // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    params = {
+        # token-shift mixing coefficients (static per channel)
+        "mu_r": jnp.full((d,), 0.5, cfg.dtype),
+        "mu_k": jnp.full((d,), 0.5, cfg.dtype),
+        "mu_v": jnp.full((d,), 0.5, cfg.dtype),
+        "mu_g": jnp.full((d,), 0.5, cfg.dtype),
+        "mu_w": jnp.full((d,), 0.5, cfg.dtype),
+        "wr": _dense_init(ks[0], (d, d), cfg.dtype),
+        "wk": _dense_init(ks[1], (d, d), cfg.dtype),
+        "wv": _dense_init(ks[2], (d, d), cfg.dtype),
+        "wg": _dense_init(ks[3], (d, d), cfg.dtype),
+        "wo": _dense_init(ks[4], (d, d), cfg.dtype),
+        # data-dependent decay: w0 + tanh(x A) B   (LoRA, Finch eq. 6)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": _dense_init(ks[5], (d, LORA_DIM), cfg.dtype),
+        "w_lora_b": _dense_init(ks[6], (LORA_DIM, d), cfg.dtype),
+        "u": jnp.zeros((h, HEAD_DIM), jnp.float32),       # bonus
+        "ln_scale": jnp.ones((d,), cfg.dtype),            # per-head groupnorm
+        # channel mix
+        "cm_mu": jnp.full((d,), 0.5, cfg.dtype),
+        "cm_k": _dense_init(ks[7], (d, cfg.d_ff), cfg.dtype),
+        "cm_v": _dense_init(ks[8], (cfg.d_ff, d), cfg.dtype),
+    }
+    axes = {
+        "mu_r": A("embed"), "mu_k": A("embed"), "mu_v": A("embed"),
+        "mu_g": A("embed"), "mu_w": A("embed"),
+        "wr": A("embed", "ff"), "wk": A("embed", "ff"),
+        "wv": A("embed", "ff"), "wg": A("embed", "ff"),
+        "wo": A("ff", "embed"),
+        "w0": A("embed"),
+        "w_lora_a": A("embed", None), "w_lora_b": A(None, "embed"),
+        "u": A("heads", None),
+        "ln_scale": A("embed"),
+        "cm_mu": A("embed"),
+        "cm_k": A("embed", "ff"), "cm_v": A("ff", "embed"),
+    }
+    return params, axes
+
+
+def _mix(x, x_prev, mu):
+    """token shift: lerp between current token and previous token."""
+    return x + (x_prev - x) * mu
+
+
+def _projections(params, x, x_prev):
+    """r,k,v,g,logw from shifted inputs.  x,x_prev: [..., d]."""
+    r = _mix(x, x_prev, params["mu_r"]) @ params["wr"]
+    k = _mix(x, x_prev, params["mu_k"]) @ params["wk"]
+    v = _mix(x, x_prev, params["mu_v"]) @ params["wv"]
+    g = _mix(x, x_prev, params["mu_g"]) @ params["wg"]
+    xw = _mix(x, x_prev, params["mu_w"])
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = -jnp.exp(params["w0"] + lora.astype(jnp.float32))  # log(w) < 0
+    return r, k, v, g, logw
+
+
+def _heads(x, h):
+    return x.reshape(*x.shape[:-1], h, HEAD_DIM)
+
+
+def _groupnorm(y, scale, h):
+    """per-head RMS normalization of the time-mix output."""
+    dt = y.dtype
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y32 = y32 * jax.lax.rsqrt(var + 1e-5)
+    flat = y32.reshape(*y.shape[:-2], y.shape[-2] * y.shape[-1])
+    return (flat * scale.astype(jnp.float32)).astype(dt)
+
+
+def time_mix_chunked(params, x, state, x_last):
+    """x: [B,S,d]; state: S matrices [B,H,N,N]; x_last: [B,d] (prev token for
+    the shift at chunk boundaries).  Returns (y [B,S,d], state', x_last')."""
+    b, s, d = x.shape
+    h = d // HEAD_DIM
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, logw = _projections(params, x, x_prev)
+    r, k, v = _heads(r, h), _heads(k, h), _heads(v, h)          # [B,S,H,N]
+    logw = _heads(logw, h)                                       # [B,S,H,N]
+    u = params["u"]
+
+    n_chunks = max(1, s // CHUNK)
+    L = s // n_chunks
+    assert L * n_chunks == s, f"seq {s} not divisible into chunks"
+
+    def reshape_c(t):
+        return jnp.moveaxis(t.reshape(b, n_chunks, L, h, HEAD_DIM), 1, 0)
+
+    rc, kc, vc, wc = map(reshape_c, (r, k, v, logw))             # [C,B,L,H,N]
+
+    def chunk_body(S, inp):
+        rr, kk, vv, lw = (t.astype(jnp.float32) for t in inp)    # [B,L,H,N]
+        cum = jnp.cumsum(lw, axis=1)                             # inclusive
+        ecum = cum - lw                                          # exclusive
+        A = jnp.exp(ecum)                                        # [B,L,H,N]
+        A_total = jnp.exp(cum[:, -1])                            # [B,H,N]
+        # intra-chunk: D[t,s,i] = prod_{s<u<t} w_u = exp(ecum_t - cum_s), s<t
+        ct = ecum[:, :, None, :, :]                              # [B,L,1,H,N]
+        cs = cum[:, None, :, :, :]                               # [B,1,L,H,N]
+        strict = jnp.tril(jnp.ones((L, L), bool), -1)[None, :, :, None, None]
+        D = jnp.where(strict, jnp.exp(ct - cs), 0.0)             # [B,L,L,H,N]
+        y_intra = jnp.einsum("blhi,blshi,bshi,bshj->blhj",
+                             rr, D, kk, vv)
+        y_diag = jnp.einsum("blhi,hi,blhi,blhj->blhj", rr, u, kk, vv)
+        y_cross = jnp.einsum("blhi,bhij->blhj", rr * A, S)
+        # state update: S' = diag(A_total) S + sum_s (A_total/A_s) k_s v_s^T
+        decay_k = jnp.exp(cum[:, -1][:, None] - cum) * kk        # [B,L,H,N]
+        S_new = A_total[..., None] * S + \
+            jnp.einsum("blhi,blhj->bhij", decay_k, vv)
+        return S_new, (y_intra + y_diag + y_cross)
+
+    state, yc = jax.lax.scan(chunk_body, state.astype(jnp.float32),
+                             (rc, kc, vc, wc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, h, HEAD_DIM)
+    y = _groupnorm(y, params["ln_scale"], h)
+    y = y * jax.nn.silu(g)
+    out = y.astype(x.dtype) @ params["wo"]
+    return out, state, x[:, -1, :]
+
+
+def time_mix_step(params, x_t, state, x_last):
+    """One decode step.  x_t: [B,d]; state [B,H,N,N]; x_last [B,d]."""
+    b, d = x_t.shape
+    h = d // HEAD_DIM
+    r, k, v, g, logw = _projections(params, x_t, x_last)
+    r, k, v = (_heads(t, h).astype(jnp.float32) for t in (r, k, v))  # [B,H,N]
+    w = jnp.exp(_heads(logw, h))                                 # [B,H,N]
+    u = params["u"]
+    kv = k[..., :, None] * v[..., None, :]                       # [B,H,N,N]
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[..., None] * kv)
+    state = w[..., None] * state + kv
+    y = _groupnorm(y, params["ln_scale"], h)
+    y = y * jax.nn.silu(g)
+    out = y.astype(x_t.dtype) @ params["wo"]
+    return out, state, x_t
+
+
+def channel_mix(params, x, x_last):
+    """RWKV channel mix (the FFN analogue).  Works for [B,S,d] and [B,d]."""
+    if x.ndim == 3:
+        x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+        new_last = x[:, -1, :]
+    else:
+        x_prev, new_last = x_last, x
+    xk = _mix(x, x_prev, params["cm_mu"])
+    hidden = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
+    hidden = shard(hidden, "batch", "seq", "ff") if hidden.ndim == 3 else hidden
+    return hidden @ params["cm_v"], new_last
+
+
+def init_state(cfg, batch: int):
+    h = cfg.d_model // HEAD_DIM
+    return {
+        "S": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tm_last": jnp.zeros((batch, cfg.d_model), cfg.dtype),
+        "cm_last": jnp.zeros((batch, cfg.d_model), cfg.dtype),
+    }

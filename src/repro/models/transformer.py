@@ -1,0 +1,440 @@
+"""The model: decoder-only LM (all families) + encoder-decoder (whisper).
+
+Layer stacking uses a **group scan**: the repeating ``block_pattern`` (e.g.
+gemma3's 5 local + 1 global, recurrentgemma's rglru/rglru/attn) becomes one
+scan body with per-slot static code; parameters are stacked across groups so
+the HLO is O(pattern), not O(num_layers).  ``first_k_dense`` prefix layers
+and the pattern remainder are unrolled explicitly.
+
+Public entry points (all pure):
+    init(cfg, key)                      -> (params, axes)
+    forward(cfg, params, batch)         -> logits | hidden
+    loss_fn(cfg, params, batch)         -> (loss, aux)     [chunked CE]
+    prefill(cfg, params, batch, cache_len) -> (last_logits, caches)
+    decode_step(cfg, params, caches, token, pos) -> (logits, caches)
+    init_cache(cfg, batch, cache_len)   -> caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import A, Axes, shard
+from . import blocks as B
+from .layers import _dense_init, apply_norm, norm_init, attention, rope
+from . import layers
+
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _plan(cfg):
+    """(prefix_kinds, pattern, n_groups, remainder_kinds) for the decoder."""
+    pattern = tuple(cfg.block_pattern)
+    n_prefix = cfg.first_k_dense
+    n_rest = cfg.num_layers - n_prefix
+    n_groups, rem = divmod(n_rest, len(pattern))
+    prefix = tuple(_strip_moe(pattern[i % len(pattern)]) for i in range(n_prefix))
+    return prefix, pattern, n_groups, pattern[:rem]
+
+
+def _strip_moe(kind: str) -> str:
+    base, _ = B.split_kind(kind)
+    return base
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg, key) -> tuple[dict, dict]:
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    axes: dict = {}
+
+    params["embed"] = _dense_init(keys[0], (cfg.vocab_size, cfg.d_model), cfg.dtype)
+    axes["embed"] = A("vocab", "embed")
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab_size), cfg.dtype)
+        axes["head"] = A("embed", "vocab")
+    params["ln_f"], axes["ln_f"] = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+
+    if cfg.frontend == "vision":
+        k1, k2 = jax.random.split(keys[2])
+        params["connector"] = {
+            "w1": _dense_init(k1, (cfg.frontend_dim, cfg.d_model), cfg.dtype),
+            "w2": _dense_init(k2, (cfg.d_model, cfg.d_model), cfg.dtype),
+        }
+        axes["connector"] = {"w1": A(None, "embed"), "w2": A("embed", "embed")}
+    if cfg.encoder_decoder:
+        # learned absolute positions (whisper)
+        max_pos = 65536
+        params["pos_emb"] = jnp.zeros((max_pos, cfg.d_model), cfg.dtype)
+        axes["pos_emb"] = A(None, "embed")
+
+    def stack_axes(ax_tree):
+        # stacked params gain a leading layer/group dim: unsharded
+        return jax.tree.map(
+            lambda ax: A(None, *ax.names), ax_tree,
+            is_leaf=lambda x: isinstance(x, Axes))
+
+    def stack_init(kinds, key, n_copies=1, *, stack=False):
+        ps, axs = [], None
+        for i in range(n_copies):
+            kp, key = jax.random.split(key)
+            group_p, group_a = [], []
+            for j, kind in enumerate(kinds):
+                kj, kp = jax.random.split(kp)
+                p, a = B.block_init(kj, cfg, kind)
+                group_p.append(p)
+                group_a.append(a)
+            ps.append(group_p)
+            axs = group_a
+        if not stack:
+            return ps[0], axs
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+        return stacked, axs
+
+    if prefix:
+        params["prefix"], axes["prefix"] = stack_init(prefix, keys[3])
+    if n_groups:
+        params["groups"], ga = stack_init(pattern, keys[4], n_groups,
+                                          stack=True)
+        axes["groups"] = stack_axes(ga)
+    if rem:
+        params["rem"], axes["rem"] = stack_init(rem, keys[5])
+
+    if cfg.encoder_decoder:
+        enc_p, enc_a = [], None
+        kp = keys[6]
+        for _ in range(cfg.enc_layers):
+            kj, kp = jax.random.split(kp)
+            p, a = B.block_init(kj, cfg, "bidir")
+            enc_p.append(p)
+            enc_a = a
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_p)
+        axes["encoder"] = stack_axes(enc_a)
+        params["ln_enc"], axes["ln_enc"] = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+        # cross attention per decoder layer (stacked over ALL layers)
+        xp, xa = [], None
+        for _ in range(cfg.num_layers):
+            kj, kp = jax.random.split(kp)
+            p, a = layers.attention_init(kj, cfg)
+            ln, lna = norm_init(cfg.norm, cfg.d_model, cfg.dtype)
+            xp.append({"attn": p, "ln": ln})
+            xa = {"attn": a, "ln": lna}
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xp)
+        axes["cross"] = stack_axes(xa)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    return shard(x, "batch", "seq", "embed")
+
+
+def _logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _inputs_embeds(cfg, params, batch):
+    """Token embeddings, with modality prefixes where configured.
+    Returns (x [B,S,d], positions [S])."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision":
+        p = batch["patches"]                       # [B,P,frontend_dim]
+        c = params["connector"]
+        pe = jax.nn.gelu(p.astype(cfg.dtype) @ c["w1"]) @ c["w2"]
+        x = jnp.concatenate([pe, x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if "pos_emb" in params and not cfg.encoder_decoder:
+        x = x + params["pos_emb"][positions]
+    return x, positions
+
+
+# ---------------------------------------------------------------------------
+# decoder trunk (full-seq)
+# ---------------------------------------------------------------------------
+
+
+def _run_blocks_seq(cfg, params, x, positions, *, enc_out=None, caches=None,
+                    remat: str = "none"):
+    """Runs prefix -> scanned groups -> remainder.  caches=None for training;
+    otherwise a cache pytree from init_cache to be filled (prefill)."""
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    layer_idx = 0
+
+    def maybe_cross(x, li):
+        if enc_out is None:
+            return x
+        cp = jax.tree.map(lambda t: t[li], params["cross"])
+        h = apply_norm(cfg.norm, cp["ln"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, cp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"])
+        kp = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        qp = jnp.arange(x.shape[1], dtype=jnp.int32)
+        o = attention(q, k, v, q_pos=qp, k_pos=kp, causal=False, window=0)
+        return x + layers.attn_output(cp["attn"], o)
+
+    # -- prefix (unrolled)
+    for j, kind in enumerate(prefix):
+        c = None if caches is None else caches["prefix"][j]
+        x, c, aux = B.block_apply_seq(cfg, kind, params["prefix"][j], x,
+                                      positions, cache=c)
+        x = maybe_cross(x, layer_idx)
+        if caches is not None:
+            caches["prefix"][j] = c
+        aux_total += aux
+        layer_idx += 1
+
+    # -- scanned groups
+    if n_groups:
+        group_params = params["groups"]
+        has_cross = enc_out is not None
+
+        def group_body(carry, xs):
+            x, aux_in, li = carry
+            gp, gc = xs
+            new_caches = []
+            for j, kind in enumerate(pattern):
+                cj = None if gc is None else gc[j]
+                x, cj, aux = B.block_apply_seq(cfg, kind, gp[j], x,
+                                               positions, cache=cj)
+                if has_cross:
+                    # cross-attn params indexed dynamically per layer
+                    cp = jax.tree.map(
+                        lambda t: jax.lax.dynamic_index_in_dim(
+                            t, li + j, 0, keepdims=False), params["cross"])
+                    h = apply_norm(cfg.norm, cp["ln"], x)
+                    q = jnp.einsum("bsd,dhk->bshk", h, cp["attn"]["wq"])
+                    k = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"])
+                    v = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"])
+                    kp = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+                    qp = jnp.arange(x.shape[1], dtype=jnp.int32)
+                    o = attention(q, k, v, q_pos=qp, k_pos=kp, causal=False,
+                                  window=0)
+                    x = x + layers.attn_output(cp["attn"], o)
+                new_caches.append(cj)
+                aux_in = aux_in + aux
+            ys = new_caches if gc is not None else None
+            return (x, aux_in, li + len(pattern)), ys
+
+        body = group_body
+        if remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat == "dots" else None)
+            body = jax.checkpoint(group_body, policy=policy,
+                                  prevent_cse=False)
+
+        gcaches = None if caches is None else caches["groups"]
+        (x, aux_total, layer_idx), group_caches_out = jax.lax.scan(
+            body, (x, aux_total, jnp.asarray(layer_idx, jnp.int32)),
+            (group_params, gcaches))
+        if caches is not None:
+            caches["groups"] = group_caches_out
+
+    # -- remainder (unrolled)
+    for j, kind in enumerate(rem):
+        c = None if caches is None else caches["rem"][j]
+        x, c, aux = B.block_apply_seq(cfg, kind, params["rem"][j], x,
+                                      positions, cache=c)
+        x = maybe_cross(x, layer_idx)
+        if caches is not None:
+            caches["rem"][j] = c
+        aux_total += aux
+        layer_idx += 1
+
+    return x, caches, aux_total
+
+
+def _run_encoder(cfg, params, frames):
+    """whisper encoder over precomputed frame embeddings [B,Se,d]."""
+    x = frames.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if "pos_emb" in params:
+        x = x + params["pos_emb"][positions]
+
+    def body(x, lp):
+        x, _, _ = B.block_apply_seq(cfg, "bidir", lp, x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg.norm, params["ln_enc"], x)
+
+
+# ---------------------------------------------------------------------------
+# public: forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, batch, *, remat: str = "none"):
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+    x, positions = _inputs_embeds(cfg, params, batch)
+    if "pos_emb" in params and cfg.encoder_decoder:
+        x = x + params["pos_emb"][positions]
+    x, _, aux = _run_blocks_seq(cfg, params, x, positions, enc_out=enc_out,
+                                remat=remat)
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    return x, aux
+
+
+def loss_fn(cfg, params, batch, *, remat: str = "dots",
+            aux_weight: float = 0.01):
+    """Chunked cross-entropy: the [B,S,V] logits tensor never materializes
+    (decisive for 262k-vocab gemma3 at 1M tokens)."""
+    x, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":               # prefix positions carry no loss
+        x = x[:, -labels.shape[1]:]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    while s % chunk:
+        chunk -= 1
+    n = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(x_i, l_i):
+        logits = jnp.einsum("bsd,dv->bsv", x_i, head).astype(jnp.float32)
+        logits = shard(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, xs):
+        x_i, l_i = xs
+        return acc + chunk_loss(x_i, l_i), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    loss = total / (b * s)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# public: serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int):
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    caches = {}
+    if prefix:
+        caches["prefix"] = [B.block_cache_init(cfg, k, batch, cache_len)
+                            for k in prefix]
+    if n_groups:
+        group = [B.block_cache_init(cfg, k, batch, cache_len) for k in pattern]
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), group)
+    if rem:
+        caches["rem"] = [B.block_cache_init(cfg, k, batch, cache_len)
+                         for k in rem]
+    if cfg.encoder_decoder:
+        hd = cfg.resolved_head_dim
+        caches["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    return caches
+
+
+def prefill(cfg, params, batch, *, cache_len: int):
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+    x, positions = _inputs_embeds(cfg, params, batch)
+    if "pos_emb" in params and cfg.encoder_decoder:
+        x = x + params["pos_emb"][positions]
+    caches = init_cache(cfg, tokens.shape[0], cache_len)
+    if cfg.encoder_decoder:
+        caches["enc_out"] = enc_out
+    x, caches, _ = _run_blocks_seq(cfg, params, x, positions, enc_out=enc_out,
+                                   caches=caches)
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    logits = _logits(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def decode_step(cfg, params, caches, token, pos):
+    """token: [B] int32; pos: [B] absolute position.  Returns (logits [B,V],
+    caches')."""
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    x = params["embed"][token][:, None, :]                # [B,1,d]
+    if "pos_emb" in params:
+        x = x + params["pos_emb"][pos][:, None, :]
+    enc_out = caches.get("enc_out") if cfg.encoder_decoder else None
+    aux = jnp.zeros((), jnp.float32)
+    layer_idx = 0
+
+    def maybe_cross(x, li):
+        if enc_out is None:
+            return x
+        cp = jax.tree.map(lambda t: jax.lax.dynamic_index_in_dim(
+            t, li, 0, keepdims=False), params["cross"])
+        h = apply_norm(cfg.norm, cp["ln"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, cp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"])
+        s = jnp.einsum("bqhk,bshk->bhqs", q * (q.shape[-1] ** -0.5), _rep(k, q))
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqs,bshk->bqhk", p, _rep(v, q))
+        return x + layers.attn_output(cp["attn"], o)
+
+    def _rep(kv, q):
+        g = q.shape[2] // kv.shape[2]
+        return jnp.repeat(kv, g, axis=2) if g > 1 else kv
+
+    for j, kind in enumerate(prefix):
+        x, caches["prefix"][j], _ = B.block_apply_step(
+            cfg, kind, params["prefix"][j], x, pos, caches["prefix"][j])
+        x = maybe_cross(x, layer_idx)
+        layer_idx += 1
+
+    if n_groups:
+        def group_body(carry, xs):
+            x, li = carry
+            gp, gc = xs
+            new_c = []
+            for j, kind in enumerate(pattern):
+                x, cj, _ = B.block_apply_step(cfg, kind, gp[j], x, pos, gc[j])
+                if enc_out is not None:
+                    x = maybe_cross(x, li + j)
+                new_c.append(cj)
+            return (x, li + len(pattern)), new_c
+
+        (x, layer_idx), new_groups = jax.lax.scan(
+            group_body, (x, jnp.asarray(layer_idx, jnp.int32)),
+            (params["groups"], caches["groups"]))
+        caches["groups"] = new_groups
+
+    for j, kind in enumerate(rem):
+        x, caches["rem"][j], _ = B.block_apply_step(
+            cfg, kind, params["rem"][j], x, pos, caches["rem"][j])
+        x = maybe_cross(x, layer_idx)
+        layer_idx += 1
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, caches

@@ -1,0 +1,3 @@
+from . import accum, adamw
+
+__all__ = ["accum", "adamw"]

@@ -1,0 +1,65 @@
+"""Microbatch gradient accumulation (lax.scan over microbatches).
+
+``train.microbatch_tokens`` is a SmartConf-managed PerfConf (DESIGN.md §4):
+smaller microbatches trade step time for activation memory, so the controller
+targets the per-step activation HBM budget.  Because microbatch count is a
+*compile-time* knob in XLA, the controller output feeds the trainer's
+re-jit boundary (quantized to divisors of the batch), not a runtime scalar.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def split_batch(batch: dict, n_micro: int) -> dict:
+    """[B, ...] -> [n_micro, B/n_micro, ...] for every leaf."""
+
+    def f(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} % microbatches {n_micro}"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def accumulate_grads(loss_fn, params, batch: dict, n_micro: int):
+    """Mean loss/grads over n_micro sequential microbatches.
+
+    loss_fn(params, micro_batch) -> (loss, aux_dict)."""
+    if n_micro <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    micro = split_batch(batch, n_micro)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb):
+        acc, loss_acc, aux_acc = carry
+        (loss, aux), g = grad_fn(params, mb)
+        acc = jax.tree.map(jnp.add, acc, g)
+        aux_acc = jax.tree.map(jnp.add, aux_acc, aux)
+        return (acc, loss_acc + loss, aux_acc), None
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    l0 = jnp.zeros((), jnp.float32)
+    aux0 = jax.eval_shape(lambda: grad_fn(params, jax.tree.map(lambda x: x[0], micro))[0][1])
+    aux0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux0)
+    (grads, loss, aux), _ = jax.lax.scan(body, (zeros_g, l0, aux0), micro)
+    inv = 1.0 / n_micro
+    return (loss * inv,
+            jax.tree.map(lambda a: a * inv, aux),
+            jax.tree.map(lambda g: g * inv, grads))
+
+
+def divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def quantize_microbatches(batch_size: int, desired: float) -> int:
+    """Nearest valid microbatch count for a controller-desired value."""
+    ds = divisors(batch_size)
+    return min(ds, key=lambda d: abs(d - desired))

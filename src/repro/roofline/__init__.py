@@ -1,0 +1,3 @@
+from .analysis import HW, model_flops, parse_collectives, roofline_terms
+
+__all__ = ["HW", "model_flops", "parse_collectives", "roofline_terms"]

@@ -1,0 +1,102 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §9).
+
+Terms (seconds, per training/serving step):
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / ICI_link_bw
+
+``compiled.cost_analysis()`` reports the per-device executable (post-SPMD),
+so its flops/bytes are already per chip.  Collective bytes are not in
+cost_analysis: :func:`parse_collectives` sums the operand/result sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the per-device HLO.
+
+Hardware model (TPU v5e-like, per assignment): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "parse_collectives", "roofline_terms", "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all typed shapes in a (possibly tuple) shape str."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Bytes moved per collective kind, from per-device HLO text.
+
+    For each collective instruction we count the *result* size (for
+    all-reduce this equals the payload; for all-gather it is the gathered
+    result, a standard upper proxy for link traffic)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result shape appears left of '= <op>('; match ' = all-gather('
+        m = re.search(r"=\s*(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(", s)
+        if not m:
+            continue
+        if m.group(2) == "-done":
+            continue  # avoid double counting start/done pairs
+        kind = m.group(1)
+        lhs = s.split("=", 1)[0]
+        nbytes = _shape_bytes(lhs)
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+def roofline_terms(cost: dict, collective_bytes: int, *, hw=HW) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw["peak_flops"]
+    t_memory = raw_bytes / hw["hbm_bw"]
+    t_collective = collective_bytes / hw["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(t_compute, t_memory, t_collective)
+    terms["bound_s"] = total
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-math FLOPs for the cell: 6*N*D train (N = active params),
+    2*N*D for a forward-only prefill, 2*N*B for one decode step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one decode token per seq

@@ -1,0 +1,277 @@
+"""Trip-count-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` visits every while body ONCE (a documented
+HloCostAnalysis limitation), so a scanned-layers model under-reports FLOPs by
+~num_layers x.  This analyzer parses the per-device post-SPMD HLO text and
+computes, per computation, recursively:
+
+  * dot FLOPs: 2 * prod(result dims) * prod(contracted dims)
+  * HBM-traffic proxy bytes: one write per instruction result + one read per
+    operand use (free ops excluded), i.e. post-fusion materialized buffers
+  * collective payload bytes per kind (result sizes)
+
+then multiplies while bodies by their ``known_trip_count`` annotation
+(emitted by XLA whenever the trip count is static — true for every lax.scan
+here) and adds called computations (fusions, calls) where referenced.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["analyze_module"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+    r"c64|c128)\[([0-9,]*)\]")
+
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(./?.*?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Ops whose operands/results genuinely travel HBM<->VMEM on TPU.  Elementwise
+# chains, broadcasts and converts fuse into producer/consumer epilogues on
+# TPU, so counting them (as raw cost_analysis does) wildly inflates the
+# memory term; this set is the analytic-roofline byte model: matmuls,
+# memory-movement ops (cache updates, gathers), reductions and collectives.
+_HBM_OPS = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "sort", "concatenate", "pad",
+    "reduce-window", "select-and-scatter", "copy",
+} | set(_COLLECTIVES)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class _Instr:
+    __slots__ = ("name", "shape", "op", "rest")
+
+    def __init__(self, name, shape, op, rest):
+        self.name, self.shape, self.op, self.rest = name, shape, op, rest
+
+
+def _parse(hlo_text: str):
+    comps: dict[str, list[_Instr]] = {}
+    current: list[_Instr] | None = None
+    for raw in hlo_text.splitlines():
+        m = _COMP_RE.match(raw)
+        if m and " = " not in raw:
+            current = comps.setdefault(m.group(2), [])
+            continue
+        if raw.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        mi = _INSTR_RE.match(raw)
+        if mi:
+            name, shape, op = mi.groups()
+            rest = raw[mi.end():]
+            current.append(_Instr(name, shape, op, rest))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
+    out = 1
+    for d in _first_dims(instr.shape):
+        out *= d
+    m = _LHS_C_RE.search(instr.rest)
+    contract = 1
+    if m:
+        ops = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+        if ops:
+            lhs_shape = shapes.get(ops[0], "")
+            dims = _first_dims(lhs_shape)
+            for idx_s in m.group(1).split(","):
+                if idx_s and int(idx_s) < len(dims):
+                    contract *= dims[int(idx_s)]
+    return 2.0 * out * contract
+
+
+def analyze_module(hlo_text: str) -> dict:
+    comps = _parse(hlo_text)
+    memo: dict[str, dict] = {}
+
+    def cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        acc = {"flops": 0.0, "bytes": 0.0, "bytes_raw": 0.0,
+               "coll_count": 0}
+        for k in _COLLECTIVES:
+            acc[k] = 0.0
+        memo[name] = acc  # cycle guard
+        instrs = comps.get(name, [])
+        shapes = {i.name: i.shape for i in instrs}
+        for i in instrs:
+            base_op = i.op[:-6] if i.op.endswith("-start") else i.op
+            if i.op.endswith("-done"):
+                continue
+            if base_op == "dot":
+                acc["flops"] += _dot_flops(i, shapes)
+            if base_op in _COLLECTIVES:
+                nbytes = _shape_bytes(i.shape)
+                acc[base_op] += nbytes
+                acc["coll_count"] += 1
+            if base_op not in _FREE_OPS:
+                operands = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+                nbytes = _shape_bytes(i.shape)
+                for opnd in operands:
+                    nbytes += _shape_bytes(shapes.get(opnd, ""))
+                acc["bytes_raw"] += nbytes
+                if base_op in _HBM_OPS:
+                    # slice-accurate traffic: in-place update ops touch only
+                    # the written/read window, not the full base buffer
+                    if base_op in ("dynamic-slice", "gather"):
+                        hbm = 2 * _shape_bytes(i.shape)
+                    elif base_op == "dynamic-update-slice":
+                        upd = shapes.get(operands[1], "") if len(operands) > 1 else ""
+                        hbm = 2 * _shape_bytes(upd)
+                    elif base_op == "scatter":
+                        upd = shapes.get(operands[2], "") if len(operands) > 2 else ""
+                        hbm = 2 * _shape_bytes(upd)
+                    else:
+                        hbm = nbytes
+                    acc["bytes"] += hbm
+            # recurse into referenced computations
+            mult = 1.0
+            callee = None
+            if base_op == "while":
+                mb = _BODY_RE.search(i.rest)
+                mt = _TRIP_RE.search(i.rest)
+                mult = float(mt.group(1)) if mt else 1.0
+                callee = mb.group(1) if mb else None
+            elif base_op in ("fusion", "call", "async-start"):
+                mc = _CALLS_RE.search(i.rest) or _TO_APPLY_RE.search(i.rest)
+                callee = mc.group(1) if mc else None
+            elif base_op == "conditional":
+                for cn in re.findall(r"(?:true_computation|false_computation|"
+                                     r"branch_computations=\{)([^,}]+)",
+                                     i.rest):
+                    sub = cost(cn.strip().lstrip("%"))
+                    for key, v in sub.items():
+                        acc[key] = acc.get(key, 0) + v
+            if callee is not None:
+                sub = cost(callee)
+                for key, v in sub.items():
+                    acc[key] = acc.get(key, 0) + mult * v
+        return acc
+
+    entry = None
+    header_iter = re.finditer(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    for m in header_iter:
+        entry = m.group(1)
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    out = cost(entry)
+    out["collective_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    out["entry"] = entry
+    return out
+
+
+def attribute(hlo_text: str, top: int = 20) -> list[dict]:
+    """Per-op attribution of bytes/flops, weighted by execution counts
+    (while trip products).  Groups by (op, jax op_name metadata) — the
+    profiler's view for the §Perf hypothesis loop."""
+    comps = _parse(hlo_text)
+    # pass 1: execution count per computation
+    counts: dict[str, float] = {}
+    entry = None
+    for m in re.finditer(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M):
+        entry = m.group(1)
+    if entry is None:
+        return []
+
+    import collections
+    pending = collections.deque([(entry, 1.0)])
+    while pending:
+        name, mult = pending.popleft()
+        counts[name] = counts.get(name, 0.0) + mult
+        for i in comps.get(name, []):
+            base_op = i.op[:-6] if i.op.endswith("-start") else i.op
+            callee, m2 = None, mult
+            if base_op == "while":
+                mb = _BODY_RE.search(i.rest)
+                mt = _TRIP_RE.search(i.rest)
+                callee = mb.group(1) if mb else None
+                m2 = mult * (float(mt.group(1)) if mt else 1.0)
+            elif base_op in ("fusion", "call", "async-start"):
+                mc = _CALLS_RE.search(i.rest) or _TO_APPLY_RE.search(i.rest)
+                callee = mc.group(1) if mc else None
+            if callee is not None and callee in comps:
+                pending.append((callee, m2))
+
+    _META_RE = re.compile(r'op_name="([^"]+)"')
+    agg: dict[tuple, dict] = {}
+    for name, instrs in comps.items():
+        cnt = counts.get(name, 0.0)
+        if cnt == 0.0:
+            continue
+        shapes = {i.name: i.shape for i in instrs}
+        for i in instrs:
+            base_op = i.op[:-6] if i.op.endswith("-start") else i.op
+            if i.op.endswith("-done") or base_op in _FREE_OPS:
+                continue
+            operands = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+            if base_op in _HBM_OPS:
+                if base_op in ("dynamic-slice", "gather"):
+                    nbytes = 2 * _shape_bytes(i.shape)
+                elif base_op == "dynamic-update-slice":
+                    upd = shapes.get(operands[1], "") if len(operands) > 1 else ""
+                    nbytes = 2 * _shape_bytes(upd)
+                elif base_op == "scatter":
+                    upd = shapes.get(operands[2], "") if len(operands) > 2 else ""
+                    nbytes = 2 * _shape_bytes(upd)
+                else:
+                    nbytes = _shape_bytes(i.shape) + sum(
+                        _shape_bytes(shapes.get(o, "")) for o in operands)
+            else:
+                nbytes = 0
+            flops = _dot_flops(i, shapes) if base_op == "dot" else 0.0
+            if nbytes == 0 and flops == 0.0:
+                continue
+            mm = _META_RE.search(i.rest)
+            tag = mm.group(1).split("/")[-1] if mm else ""
+            key = (base_op, tag)
+            rec = agg.setdefault(key, {"op": base_op, "tag": tag,
+                                       "bytes": 0.0, "flops": 0.0})
+            rec["bytes"] += nbytes * cnt
+            rec["flops"] += flops * cnt
+    out = sorted(agg.values(), key=lambda r: -(r["bytes"]))
+    return out[:top]

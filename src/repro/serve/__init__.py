@@ -1,0 +1,4 @@
+from .engine import Request, ServeEngine
+from .kv_cache import KVBlockPool, kv_bytes_per_token
+
+__all__ = ["Request", "ServeEngine", "KVBlockPool", "kv_bytes_per_token"]

@@ -1,0 +1,269 @@
+"""Continuous-batching serve engine with SmartConf-governed admission.
+
+This is the framework's HB3813/HB6728 (paper §6.2, Fig. 6/8): two PerfConfs
+share the hard ``hbm_bytes`` constraint —
+
+  * ``serve.max_queue_tokens``  (indirect; deputy = tokens waiting in the
+    admission queue) — a larger queue absorbs request bursts but queued
+    prompts hold host/device memory;
+  * ``serve.kv_block_budget``   (indirect; deputy = live KV blocks) — more
+    resident sequences increase decode batch efficiency but eat HBM.
+
+Both are ``super_hard`` on the same metric, so their controllers split the
+error via the §5.4 interaction factor (N = 2).  A third, soft PerfConf
+``serve.prefill_chunk_tokens`` bounds decode-latency interference from long
+prefills (HB2149-style trade-off).
+
+Engine loop (one `tick`):
+  admission -> scheduling (chunked prefill, KV allocation) -> fused decode
+  step over all running slots -> completion/free -> controller updates.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (ControllerModel, GoalSpec, HBMAccountant,
+                        LatencySensor, SmartConfIndirect, SmartConf,
+                        ThroughputSensor)
+from repro.core.smartconf import ConfRegistry
+from repro.models import zoo
+from .kv_cache import KVBlockPool, kv_bytes_per_token
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int
+    prompt_bytes: int = 0
+    submitted_t: float = 0.0
+    first_token_t: float | None = None
+    done_t: float | None = None
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    prefilled: int = 0          # prompt tokens already prefilled (chunking)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 cache_len: int = 256, hbm_budget_bytes: int | None = None,
+                 block_tokens: int = 16, enable_smartconf: bool = True,
+                 latency_goal_s: float | None = None,
+                 registry: ConfRegistry | None = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.clock = clock
+
+        self.accountant = HBMAccountant(budget_bytes=hbm_budget_bytes)
+        weight_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
+                           for x in jax.tree.leaves(params))
+        self.accountant.set("weights", int(weight_bytes))
+
+        self.pool = KVBlockPool(cfg, block_tokens=block_tokens,
+                                max_blocks=2**30, accountant=self.accountant)
+        self.registry = registry or ConfRegistry()
+
+        # engine state
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.queued: collections.deque[Request] = collections.deque()
+        self.queued_tokens = 0
+        self.running: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.rejected = 0
+        self._next_slot = list(range(max_batch))
+
+        # model caches (one fused batch across slots)
+        self.caches = zoo.init_cache(cfg, max_batch, cache_len)
+        self.slot_pos = np.full((max_batch,), -1, np.int64)
+        self.slot_tokens = np.zeros((max_batch,), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, q: zoo.decode_step(cfg, p, c, t, q))
+        self._prefill = jax.jit(
+            lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
+
+        # sensors
+        self.decode_latency = LatencySensor()
+        self.ttft = LatencySensor()
+        self.throughput = ThroughputSensor(window_seconds=5.0)
+
+        # SmartConf PerfConfs
+        self.enable_smartconf = enable_smartconf
+        self.max_queue_tokens = 4 * cache_len
+        self.prefill_chunk = cache_len
+        self.sc_queue = None
+        self.sc_kv = None
+        self.sc_chunk = None
+        if enable_smartconf and hbm_budget_bytes:
+            token_bytes = 8  # queue holds int32 prompt+label views per token
+            goal = GoalSpec(float(hbm_budget_bytes), hard=True,
+                            super_hard=True)
+            self.sc_queue = SmartConfIndirect(
+                "serve.max_queue_tokens", metric="hbm_bytes", goal=goal,
+                initial=0.0, registry=self.registry,
+                model=ControllerModel(alpha=float(token_bytes), lam=0.05,
+                                      delta=1.15, conf_min=0.0,
+                                      conf_max=1e9))
+            self.sc_kv = SmartConfIndirect(
+                "serve.kv_block_budget", metric="hbm_bytes", goal=goal,
+                initial=1.0, registry=self.registry,
+                model=ControllerModel(alpha=float(self.pool.block_bytes),
+                                      lam=0.05, delta=1.15, conf_min=1.0,
+                                      conf_max=1e9))
+            if latency_goal_s is not None:
+                # alpha: prefill seconds per token, measured lazily; start 1e-4
+                self.sc_chunk = SmartConf(
+                    "serve.prefill_chunk_tokens", metric="decode_p99_s",
+                    goal=GoalSpec(latency_goal_s, hard=False),
+                    initial=float(cache_len), registry=self.registry,
+                    model=ControllerModel(alpha=1e-4, lam=0.1, delta=1.3,
+                                          conf_min=float(block_tokens),
+                                          conf_max=float(cache_len)))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        req.prompt_bytes = int(req.prompt.nbytes * 2)
+        req.submitted_t = self.clock()
+        self.waiting.append(req)
+
+    def hbm_bytes(self) -> int:
+        return self.accountant.total()
+
+    # ------------------------------------------------------------- one tick
+    def tick(self) -> dict:
+        t0 = self.clock()
+        self._update_controllers()
+        self._admit()
+        self._schedule()
+        n_tokens = self._decode_tick()
+        self._finish()
+        self.decode_latency.record(self.clock() - t0)
+        return {
+            "queued": len(self.queued), "running": len(self.running),
+            "finished": len(self.finished), "hbm": self.hbm_bytes(),
+            "tokens": n_tokens,
+        }
+
+    def run(self, ticks: int) -> list[dict]:
+        return [self.tick() for _ in range(ticks)]
+
+    # ------------------------------------------------------------ internals
+    def _update_controllers(self) -> None:
+        if not self.enable_smartconf or self.sc_queue is None:
+            return
+        hbm = float(self.hbm_bytes())
+        self.sc_queue.set_perf(hbm, self.queued_tokens)
+        self.max_queue_tokens = max(0, int(self.sc_queue.get_conf()))
+        self.sc_kv.set_perf(hbm, self.pool.used_blocks)
+        self.pool.set_budget(max(1, int(self.sc_kv.get_conf())))
+        if self.sc_chunk is not None:
+            self.sc_chunk.set_perf(self.decode_latency.p99())
+            self.prefill_chunk = max(1, int(self.sc_chunk.get_conf()))
+
+    def _admit(self) -> None:
+        moved = True
+        while moved and self.waiting:
+            req = self.waiting[0]
+            if self.queued_tokens + len(req.prompt) > self.max_queue_tokens:
+                break
+            self.waiting.popleft()
+            self.queued.append(req)
+            self.queued_tokens += len(req.prompt)
+            self.accountant.charge("queue", req.prompt_bytes)
+            moved = True
+
+    def _schedule(self) -> None:
+        while self.queued and self._next_slot:
+            req = self.queued[0]
+            total = len(req.prompt) + req.max_new_tokens
+            if not self.pool.ensure(req.req_id, min(total, self.cache_len)):
+                break  # KV budget exhausted; stay queued
+            self.queued.popleft()
+            self.queued_tokens -= len(req.prompt)
+            self.accountant.credit("queue", req.prompt_bytes)
+            req.slot = self._next_slot.pop(0)
+            self._do_prefill(req)
+            self.running[req.slot] = req
+
+    def _do_prefill(self, req: Request) -> None:
+        """Prefill the whole prompt (chunk bookkeeping records interference)."""
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        batch = {"tokens": prompt}
+        if self.cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_patches, self.cfg.frontend_dim), jnp.float32)
+        if self.cfg.encoder_decoder:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+        logits, one_cache = self._prefill(self.params, batch)
+        self._merge_cache(one_cache, req.slot)
+        first = int(jnp.argmax(logits[0]))
+        req.generated.append(first)
+        req.first_token_t = self.clock()
+        self.ttft.record(req.first_token_t - req.submitted_t)
+        npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
+        self.slot_pos[req.slot] = len(req.prompt) + npatch
+        self.slot_tokens[req.slot] = first
+        req.prefilled = len(req.prompt)
+
+    def _merge_cache(self, one_cache, slot: int) -> None:
+        def merge(full, one):
+            axis = None
+            for i, (f, o) in enumerate(zip(full.shape, one.shape)):
+                if o == 1 and f == self.max_batch:
+                    axis = i
+                    break
+                if f != o:
+                    return full  # shape mismatch (e.g. enc_out cache len)
+            if axis is None:
+                return full
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
+
+        self.caches = jax.tree.map(merge, self.caches, one_cache)
+
+    def _decode_tick(self) -> int:
+        if not self.running:
+            return 0
+        tok = jnp.asarray(self.slot_tokens)
+        pos = jnp.asarray(np.maximum(self.slot_pos, 0).astype(np.int32))
+        logits, self.caches = self._decode(self.params, self.caches, tok, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        n = 0
+        for slot, req in list(self.running.items()):
+            self.slot_pos[slot] += 1
+            self.slot_tokens[slot] = nxt[slot]
+            req.generated.append(int(nxt[slot]))
+            n += 1
+        self.throughput.record(n)
+        return n
+
+    def _finish(self) -> None:
+        for slot, req in list(self.running.items()):
+            if len(req.generated) >= req.max_new_tokens:
+                req.done_t = self.clock()
+                self.finished.append(req)
+                del self.running[slot]
+                self._next_slot.append(slot)
+                self.pool.free(req.req_id)
+                self.slot_pos[slot] = -1
+                self.slot_tokens[slot] = 0
+
+    def close(self) -> None:
+        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk):
+            if sc is not None:
+                sc.close()

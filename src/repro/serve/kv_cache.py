@@ -1,0 +1,93 @@
+"""KV-cache pool with block-level HBM accounting.
+
+The serve engine allocates cache *blocks* (fixed token granularity) per
+sequence; the pool's byte ledger is the deputy-facing sensor behind the
+``serve.kv_block_budget`` SmartConf (indirect, hard on ``hbm_bytes``).
+Model-side cache tensors are preallocated at engine batch capacity; the pool
+tracks logical occupancy (which is what OOMs a real deployment when paged).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.core.sensors import HBMAccountant
+
+__all__ = ["KVBlockPool", "kv_bytes_per_token"]
+
+
+def kv_bytes_per_token(cfg: ArchConfig) -> int:
+    """HBM bytes one token of context occupies across all layers."""
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    hd = cfg.resolved_head_dim
+    per_layer_attn = 2 * cfg.num_kv_heads * hd * dt
+    total = 0
+    pattern = cfg.block_pattern
+    for i in range(cfg.num_layers):
+        base = pattern[i % len(pattern)].split("+")[0]
+        if base in ("rwkv6", "rglru"):
+            continue  # O(1) state, not per-token
+        total += per_layer_attn
+    return total
+
+
+@dataclasses.dataclass
+class _Seq:
+    seq_id: int
+    blocks: int
+
+
+class KVBlockPool:
+    def __init__(self, cfg: ArchConfig, *, block_tokens: int = 64,
+                 max_blocks: int = 4096,
+                 accountant: HBMAccountant | None = None) -> None:
+        self.cfg = cfg
+        self.block_tokens = block_tokens
+        self.block_bytes = kv_bytes_per_token(cfg) * block_tokens
+        self.max_blocks = max_blocks
+        self.accountant = accountant
+        self._seqs: dict[int, _Seq] = {}
+        self.used_blocks = 0
+        self.alloc_failures = 0
+
+    # budget is the SmartConf-actuated threshold (deputy = used_blocks)
+    def set_budget(self, max_blocks: int) -> None:
+        """Threshold update; running sequences above the new budget are
+        tolerated until they free (paper §4.2 temporary inconsistency)."""
+        self.max_blocks = max(1, int(max_blocks))
+
+    def ensure(self, seq_id: int, tokens: int) -> bool:
+        """Grow seq to cover ``tokens``; False if the budget blocks it."""
+        need = (tokens + self.block_tokens - 1) // self.block_tokens
+        seq = self._seqs.get(seq_id)
+        have = seq.blocks if seq else 0
+        delta = need - have
+        if delta <= 0:
+            return True
+        if self.used_blocks + delta > self.max_blocks:
+            self.alloc_failures += 1
+            return False
+        if seq is None:
+            seq = self._seqs[seq_id] = _Seq(seq_id, 0)
+        seq.blocks += delta
+        self.used_blocks += delta
+        if self.accountant is not None:
+            self.accountant.charge("kv_cache", delta * self.block_bytes)
+        return True
+
+    def free(self, seq_id: int) -> None:
+        seq = self._seqs.pop(seq_id, None)
+        if seq is None:
+            return
+        self.used_blocks -= seq.blocks
+        if self.accountant is not None:
+            self.accountant.credit("kv_cache", seq.blocks * self.block_bytes)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.used_blocks * self.block_bytes
+
+    @property
+    def live_seqs(self) -> int:
+        return len(self._seqs)

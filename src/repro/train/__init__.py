@@ -1,0 +1,3 @@
+from . import train_step
+
+__all__ = ["train_step"]

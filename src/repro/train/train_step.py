@@ -1,0 +1,136 @@
+"""Train/prefill/serve step factories with explicit sharding derivation.
+
+These are the functions the dry-run lowers and the trainer executes; the
+sharding rules (DESIGN.md §6) live in ``repro.distributed.sharding`` and are
+resolved against whatever mesh is active.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import zoo
+from repro.optim import accum, adamw
+
+__all__ = [
+    "make_train_step", "make_prefill_step", "make_serve_step",
+    "batch_pspecs", "cache_pspecs", "state_shardings",
+]
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    n_micro: int = 1, remat: str = "dots"):
+    def train_step(params, opt_state, batch):
+        loss_f = lambda p, b: zoo.loss_fn(cfg, p, b, remat=remat)
+        loss, aux, grads = accum.accumulate_grads(loss_f, params, batch, n_micro)
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **aux)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, cache_len: int):
+    def prefill_step(params, batch):
+        return zoo.prefill(cfg, params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, caches, token, pos):
+        return zoo.decode_step(cfg, params, caches, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding derivation
+# ---------------------------------------------------------------------------
+
+
+def _div_axes(size: int, names: tuple[str, ...], mesh) -> tuple[str, ...]:
+    """Use the given mesh axes only if ``size`` divides evenly across them."""
+    prod = 1
+    chosen = []
+    for n in names:
+        if n in mesh.axis_names:
+            prod *= mesh.shape[n]
+            chosen.append(n)
+    if chosen and size % prod == 0:
+        return tuple(chosen)
+    return ()
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """PartitionSpecs for the input batch of this cell."""
+    b = shape.global_batch
+    baxes = _div_axes(b, ("pod", "data"), mesh) or None
+    if isinstance(baxes, tuple) and len(baxes) == 1:
+        baxes = baxes[0]
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = P(baxes, None)
+        if shape.kind == "train":
+            specs["labels"] = P(baxes, None)
+    else:
+        specs["token"] = P(baxes)
+        specs["pos"] = P(baxes)
+        specs["caches"] = cache_pspecs(
+            zoo.init_cache, cfg, b, shape.seq_len, mesh)
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        specs["patches"] = P(baxes, None, None)
+    if cfg.encoder_decoder and shape.kind != "decode":
+        specs["frames"] = P(baxes, None, None)
+    return specs
+
+
+def cache_pspecs(init_cache_fn, cfg, batch: int, seq_len: int, mesh):
+    """Per-leaf cache specs: batch over (pod, data) when divisible; the KV
+    sequence dim over 'model' (SP); recurrent states batch-sharded only."""
+    baxes = _div_axes(batch, ("pod", "data"), mesh) or None
+    if isinstance(baxes, tuple) and len(baxes) == 1:
+        baxes = baxes[0]
+    shapes = jax.eval_shape(lambda: init_cache_fn(cfg, batch, seq_len))
+
+    def leaf_spec(x):
+        nd = len(x.shape)
+        # identify dims: leading may be n_groups (stacked); batch dim equals
+        # `batch`; a long dim (> 1024) is the kv-seq dim.
+        parts = [None] * nd
+        for i, s in enumerate(x.shape):
+            if s == batch and parts.count(baxes) == 0 and baxes is not None:
+                parts[i] = baxes
+            elif s >= 4096 and s % mesh.shape.get("model", 1) == 0 \
+                    and "model" not in parts:
+                parts[i] = "model"
+        return P(*parts)
+
+    return jax.tree.map(leaf_spec, shapes)
+
+
+def state_shardings(cfg: ArchConfig, mesh, *, fsdp, with_opt: bool):
+    """(param ShapeDtypeStructs, param NamedShardings[, opt structs/shardings])."""
+    with shd.use_mesh(mesh, fsdp=fsdp):
+        aparams, axes = zoo.abstract_params(cfg)
+        pspecs = shd.params_pspecs(aparams, axes)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    if not with_opt:
+        return aparams, pshard, None, None
+    aopt = jax.eval_shape(adamw.init, aparams)
+    ospecs = adamw.state_pspecs(pspecs)
+    oshard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), ospecs,
+        is_leaf=lambda x: isinstance(x, P))
+    return aparams, pshard, aopt, oshard

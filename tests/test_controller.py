@@ -1,0 +1,132 @@
+"""Unit tests for the SmartConf control law (paper §5)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerModel, GoalSpec, SmartController,
+                        compute_pole, compute_virtual_goal, fit_model)
+from repro.core.ablations import NoVirtualGoalController, SinglePoleController
+
+
+def test_pole_rule():
+    assert compute_pole(1.0) == 0.0
+    assert compute_pole(2.0) == 0.0
+    assert compute_pole(4.0) == pytest.approx(0.5)     # p = 1 - 2/Delta
+    assert 0.0 <= compute_pole(100.0) < 1.0
+
+
+def test_virtual_goal_upper_and_lower():
+    g = GoalSpec(100.0, hard=True)
+    assert compute_virtual_goal(g, 0.1) == pytest.approx(90.0)
+    g2 = GoalSpec(100.0, hard=True, direction="lower")
+    assert compute_virtual_goal(g2, 0.1) == pytest.approx(110.0)
+    soft = GoalSpec(100.0, hard=False)
+    assert compute_virtual_goal(soft, 0.5) == 100.0    # soft goals untouched
+
+
+def test_fit_model_affine_slope_and_noise_stats():
+    # s = 2c + 10 with noise
+    rng = np.random.default_rng(0)
+    confs = [10, 20, 30, 40]
+    samples = [[2 * c + 10 + rng.normal(0, 1) for _ in range(50)] for c in confs]
+    m = fit_model(confs, samples)
+    assert m.alpha == pytest.approx(2.0, rel=0.1)
+    assert m.lam < 0.1
+    assert m.delta == pytest.approx(1 + 3 * m.lam)
+
+
+def test_fit_model_negative_slope():
+    confs = [100, 200, 300]
+    samples = [[1000 - 0.9 * c] * 3 for c in confs]
+    m = fit_model(confs, samples)
+    assert m.alpha == pytest.approx(-0.9, rel=1e-6)
+
+
+def test_controller_converges_linear_plant():
+    model = ControllerModel(alpha=2.0, delta=1.5, lam=0.0, conf_max=1000)
+    ctl = SmartController(model, GoalSpec(100.0, hard=False), 0.0)
+    s = 0.0
+    for _ in range(50):
+        ctl.observe(s)
+        c = ctl.actuate()
+        s = 2.0 * c   # true plant matches the model
+    assert s == pytest.approx(100.0, abs=1e-6)
+
+
+def test_controller_converges_with_model_error_within_bound():
+    # true alpha / modeled alpha = 1.8 < 2: must converge with p = 0
+    model = ControllerModel(alpha=1.0, delta=1.2, lam=0.0, conf_max=1e9,
+                            integer=False)
+    ctl = SmartController(model, GoalSpec(90.0, hard=False), 0.0)
+    s = 0.0
+    for _ in range(200):
+        ctl.observe(s)
+        s = 1.8 * ctl.actuate()
+    assert s == pytest.approx(90.0, rel=1e-3)
+
+
+def test_two_pole_switch_on_hard_goal():
+    model = ControllerModel(alpha=1.0, delta=4.0, lam=0.1, conf_min=-1e9,
+                            conf_max=1e9, integer=False)
+    ctl = SmartController(model, GoalSpec(100.0, hard=True), 0.0)
+    assert ctl.pole == pytest.approx(0.5)
+    # in danger (above the virtual goal) the aggressive pole applies:
+    ctl.observe(99.0)        # virtual goal = 90
+    c_before = ctl.conf
+    c = ctl.actuate()
+    # full-gain correction: delta_c = (1-0)/alpha * (90-99) = -9
+    assert c - c_before == pytest.approx(-9.0, abs=1e-6)
+    # in the safe zone the conservative pole applies (half gain)
+    ctl2 = SmartController(model, GoalSpec(100.0, hard=True), 0.0)
+    ctl2.observe(50.0)
+    c2 = ctl2.actuate()
+    assert c2 == pytest.approx(0.5 * (90.0 - 50.0), abs=1e-6)
+
+
+def test_indirect_controller_uses_deputy():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.0, conf_max=1e9)
+    ctl = SmartController(model, GoalSpec(100.0, hard=False), 0.0)
+    ctl.observe(40.0, deputy=70.0)
+    # next value integrates from the deputy, not from the old conf
+    assert ctl.actuate() == pytest.approx(70.0 + (100.0 - 40.0))
+
+
+def test_interaction_factor_splits_gain():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.0, conf_max=1e9)
+    ctl = SmartController(model, GoalSpec(100.0, hard=False), 0.0,
+                          n_interacting=2)
+    ctl.observe(60.0)
+    assert ctl.actuate() == pytest.approx(20.0)   # (100-60)/2
+
+
+def test_goal_unreachable_flag():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.0, conf_max=10.0)
+    ctl = SmartController(model, GoalSpec(1000.0, hard=False), 0.0)
+    ctl.observe(0.0)
+    assert ctl.actuate() == 10.0
+    assert ctl.goal_unreachable
+
+
+def test_runtime_goal_update():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.1)
+    ctl = SmartController(model, GoalSpec(100.0, hard=True), 0.0)
+    vg1 = ctl.virtual_goal
+    ctl.set_goal(GoalSpec(50.0, hard=True))
+    assert ctl.virtual_goal == pytest.approx(vg1 / 2)
+
+
+def test_ablation_single_pole_never_aggressive():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.1, conf_min=-1e9,
+                            conf_max=1e9, integer=False)
+    ctl = SinglePoleController(model, GoalSpec(100.0, hard=True), 0.0, pole=0.9)
+    ctl.observe(99.0)   # deep in danger
+    c = ctl.actuate()
+    assert abs(c) == pytest.approx(0.1 * 9.0, abs=1e-6)  # still 1-p = 0.1 gain
+
+
+def test_ablation_no_virtual_goal_targets_real_goal():
+    model = ControllerModel(alpha=1.0, delta=1.0, lam=0.2, conf_max=1e9)
+    ctl = NoVirtualGoalController(model, GoalSpec(100.0, hard=True), 0.0)
+    assert ctl.virtual_goal == 100.0

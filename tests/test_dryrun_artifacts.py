@@ -1,0 +1,52 @@
+"""Validates the committed dry-run artifacts: every assigned (arch x shape x
+mesh) cell must have compiled (deliverable e/f), with coherent analysis."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, cells
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def _expected_cells():
+    out = []
+    for aid in ARCH_IDS:
+        for shape_name, _ in cells(aid):
+            for mesh in ("pod16x16", "pod2x16x16"):
+                out.append((mesh, aid, shape_name))
+    return out
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART_DIR, "*.json")),
+                    reason="dry-run artifacts not generated yet")
+def test_all_cells_compiled():
+    missing, failed = [], []
+    for mesh, aid, shape in _expected_cells():
+        path = os.path.join(ART_DIR, f"{mesh}__{aid}__{shape}.json")
+        if not os.path.exists(path):
+            missing.append((mesh, aid, shape))
+            continue
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            failed.append((mesh, aid, shape, rec.get("error")))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART_DIR, "*.json")),
+                    reason="dry-run artifacts not generated yet")
+def test_roofline_terms_sane():
+    for path in glob.glob(os.path.join(ART_DIR, "*.json")):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        t = rec["roofline"]
+        assert t["compute_s"] >= 0 and t["memory_s"] >= 0
+        assert t["dominant"] in ("compute_s", "memory_s", "collective_s")
+        assert rec["flops_per_chip"] > 0
+        # multi-pod mesh has 512 chips, single 256
+        assert rec["n_chips"] == (512 if rec["mesh"] == "pod2x16x16" else 256)

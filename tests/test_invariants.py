@@ -1,0 +1,78 @@
+"""Hypothesis property tests on system invariants: ring KV caches, the KV
+block pool ledger, and the prefetch queue accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import blocks as B
+from repro.serve.kv_cache import KVBlockPool
+
+
+@given(st.integers(min_value=1, max_value=80),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ring_cache_holds_last_window(n_tokens, seed):
+    """After writing positions 0..n-1 one step at a time, a ring cache of
+    size W contains exactly the last min(n, W) positions."""
+    cfg = reduced(get_config("h2o-danube-3-4b"))  # swa kind
+    W = 16
+    cache = {
+        "k": jnp.zeros((1, W, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        "v": jnp.zeros((1, W, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        "pos": jnp.full((1, W), -1, jnp.int32),
+    }
+    for pos in range(n_tokens):
+        slot = pos % W
+        cache["pos"] = cache["pos"].at[:, slot].set(pos)
+    got = sorted(int(p) for p in np.asarray(cache["pos"][0]) if p >= 0)
+    want = list(range(max(0, n_tokens - W), n_tokens))
+    assert got == want
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 200)),
+                min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_kv_pool_ledger_invariants(ops):
+    """Random ensure/free sequences: used_blocks == sum of live seq blocks,
+    never exceeds budget, bytes ledger consistent."""
+    cfg = reduced(get_config("yi-6b"))
+    pool = KVBlockPool(cfg, block_tokens=16, max_blocks=24)
+    live = {}
+    for seq_id, tokens in ops:
+        if seq_id in live and tokens % 3 == 0:
+            pool.free(seq_id)
+            live.pop(seq_id)
+            continue
+        need = (tokens + 15) // 16
+        prev = live.get(seq_id, 0)
+        want = max(prev, need)
+        ok = pool.ensure(seq_id, tokens)
+        if ok:
+            live[seq_id] = want
+        assert pool.used_blocks == sum(live.values())
+        assert pool.used_blocks <= pool.max_blocks
+        assert pool.used_bytes == pool.used_blocks * pool.block_bytes
+    for s in list(live):
+        pool.free(s)
+    assert pool.used_blocks == 0
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=12))
+@settings(max_examples=10, deadline=None)
+def test_prefetch_accounting_balances(depth, n_batches):
+    """Every get() credits exactly what the producer charged."""
+    from repro.core.sensors import HBMAccountant
+    from repro.data import PrefetchPipeline, SyntheticTokens
+
+    acct = HBMAccountant()
+    pipe = PrefetchPipeline(SyntheticTokens(100, 2, 8), depth=depth,
+                            accountant=acct)
+    for _ in range(n_batches):
+        pipe.get(timeout=10.0)
+    pipe.close()
+    # whatever remains charged equals what is still buffered
+    assert acct.breakdown().get("prefetch", 0) == pipe.buffered_bytes()

@@ -1,0 +1,89 @@
+"""The jittable controller twin: parity with the host controller, vmap
+batching, metric-id coordination."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ControllerModel, GoalSpec, SmartController
+from repro.core import jax_controller as jc
+
+
+def _pair(alpha=2.0, delta=4.0, lam=0.1, goal=100.0, hard=True):
+    model = ControllerModel(alpha=alpha, delta=delta, lam=lam,
+                            conf_min=0.0, conf_max=1e9, integer=False)
+    g = GoalSpec(goal, hard=hard)
+    host = SmartController(model, g, 0.0)
+    spec = jc.make_spec(model, g)
+    state = jc.init_state(0.0)
+    return host, spec, state
+
+
+def test_parity_with_host_controller():
+    host, spec, state = _pair()
+    step = jax.jit(jc.controller_step)
+    for s in [10.0, 40.0, 95.0, 120.0, 80.0, 89.0]:
+        host.observe(s)
+        want = host.actuate()
+        state, got = step(spec, state, jnp.asarray(s))
+        assert float(got) == pytest.approx(want, rel=1e-5), s
+
+
+def test_indirect_parity():
+    host, spec, state = _pair()
+    step = jax.jit(jc.indirect_controller_step)
+    host.observe(50.0, deputy=33.0)
+    want = host.actuate()
+    _, got = step(spec, state, jnp.asarray(50.0), jnp.asarray(33.0))
+    assert float(got) == pytest.approx(want, rel=1e-5)
+
+
+def test_vmap_batch_of_controllers():
+    specs = jc.stack_specs([
+        jc.make_spec(ControllerModel(alpha=1.0, delta=1.0, conf_max=1e9,
+                                     integer=False), GoalSpec(50.0)),
+        jc.make_spec(ControllerModel(alpha=2.0, delta=4.0, conf_max=1e9,
+                                     integer=False), GoalSpec(100.0, hard=True)),
+    ])
+    states = jc.ControllerState(conf=jnp.zeros(2))
+    step = jax.vmap(jc.controller_step)
+    states, confs = step(specs, states, jnp.asarray([10.0, 10.0]))
+    assert confs.shape == (2,)
+    assert float(confs[0]) == pytest.approx(40.0)
+
+
+def test_interaction_counts():
+    ids = jnp.asarray([0, 0, 1, 2, 2, 2], jnp.int32)
+    n = jc.interaction_counts(ids, 4)
+    np.testing.assert_array_equal(np.asarray(n), [2, 2, 1, 3, 3, 3])
+
+
+def test_coordinated_step_splits_error():
+    model = ControllerModel(alpha=1.0, delta=1.0, conf_max=1e9, integer=False)
+    specs = jc.stack_specs([
+        jc.make_spec(model, GoalSpec(100.0, super_hard=True), metric_id=0),
+        jc.make_spec(model, GoalSpec(100.0, super_hard=True), metric_id=0),
+    ])
+    states = jc.ControllerState(conf=jnp.zeros(2))
+    # both below the virtual goal; shared metric, N = 2 -> half gain each
+    vg = float(specs.virtual_goal[0])
+    _, confs = jc.coordinated_step(specs, states, jnp.asarray([50.0, 50.0]))
+    assert float(confs[0]) == pytest.approx((vg - 50.0) / 2.0, rel=1e-5)
+
+
+def test_controller_step_inside_scan():
+    """The in-graph controller must compose with lax.scan (serve loop use)."""
+    model = ControllerModel(alpha=1.0, delta=1.0, conf_max=1e9, integer=False)
+    spec = jc.make_spec(model, GoalSpec(10.0))
+    state = jc.init_state(0.0)
+
+    def body(carry, _):
+        st, plant = carry
+        st, conf = jc.controller_step(spec, st, plant)
+        plant = conf  # plant: s = c
+        return (st, plant), plant
+
+    (_, final), trace = jax.lax.scan(body, (state, jnp.asarray(0.0)),
+                                     None, length=20)
+    assert float(final) == pytest.approx(10.0, rel=1e-4)

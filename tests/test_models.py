@@ -1,0 +1,121 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.models import transformer, zoo
+
+SMOKE = ShapeConfig("smoke", 64, 2, "train")
+
+
+def _smoke_cfg(arch_id):
+    cfg = reduced(get_config(arch_id))
+    if cfg.moe:   # ample capacity -> deterministic routing for equivalence
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id, rng):
+    cfg = _smoke_cfg(arch_id)
+    params, axes = zoo.init(cfg, jax.random.key(0))
+    batch = zoo.make_batch(cfg, SMOKE, rng)
+    loss, parts = jax.jit(lambda p, b: zoo.loss_fn(cfg, p, b))(params, batch)
+    assert jnp.isfinite(loss), f"{arch_id} loss not finite"
+    assert 0.0 < float(loss) < 20.0
+    # gradients flow and are finite
+    g = jax.grad(lambda p: zoo.loss_fn(cfg, p, batch)[0])(params)
+    flat = jax.tree.leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in flat)
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in flat), "all-zero grads"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_shapes(arch_id, rng):
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    batch = zoo.make_batch(cfg, SMOKE, rng)
+    x, aux = transformer.forward(cfg, params, batch)
+    assert x.shape[0] == SMOKE.global_batch
+    assert x.shape[-1] == cfg.d_model
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_decode_equals_forward(arch_id, rng):
+    """The decode path (ring caches, recurrent states, cross-attn caches)
+    must agree with the full-sequence forward at the last position."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    B, S = 2, 33   # odd length exercises ring wrap (window 32)
+    st = S - (cfg.num_patches if cfg.frontend == "vision" else 0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, st)), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_patches, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+
+    x, _ = transformer.forward(cfg, params, batch)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    full_logits = (x[:, -1] @ head).astype(jnp.float32)
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    _, caches = transformer.prefill(cfg, params, pre, cache_len=2 * S)
+    npatch = cfg.num_patches if cfg.frontend == "vision" else 0
+    pos = jnp.full((B,), st - 1 + npatch, jnp.int32)
+    dec_logits, _ = transformer.decode_step(cfg, params, caches,
+                                            batch["tokens"][:, -1], pos)
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-9
+    err = float(jnp.max(jnp.abs(full_logits - dec_logits))) / scale
+    assert err < 5e-3, f"{arch_id}: prefill/decode mismatch rel={err:.2e}"
+
+
+def test_moe_matches_reference(rng):
+    from repro.models import moe as moe_lib
+    cfg = _smoke_cfg("deepseek-moe-16b")
+    params, _ = moe_lib.moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)) * 0.5, jnp.float32)
+    out = moe_lib.moe_apply(params, x, cfg)
+    ref = moe_lib.moe_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded(rng):
+    import dataclasses as dc
+    from repro.models import moe as moe_lib
+    cfg = dc.replace(_smoke_cfg("deepseek-moe-16b"), capacity_factor=1.0)
+    params, _ = moe_lib.moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 64, cfg.d_model)), jnp.float32)
+    out, aux = moe_lib.moe_apply(params, x, cfg, return_aux=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) > 0.0   # load-balance loss reported
+
+
+def test_param_count_analytic_close(rng):
+    """Analytic param_count tracks the real tree within 10%."""
+    for arch_id in ("yi-6b", "rwkv6-7b", "deepseek-moe-16b"):
+        cfg = _smoke_cfg(arch_id)
+        params, _ = zoo.init(cfg, jax.random.key(0))
+        real = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        approx = cfg.param_count()
+        assert abs(real - approx) / real < 0.15, (arch_id, real, approx)
+
+
+def test_long_context_gate():
+    from repro.configs import cells
+    for aid in ARCH_IDS:
+        names = [s for s, _ in cells(aid)]
+        cfg = get_config(aid)
+        assert ("long_500k" in names) == cfg.supports_long_context

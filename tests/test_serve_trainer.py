@@ -1,0 +1,121 @@
+"""Integration: serve engine under SmartConf control; trainer restart."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.smartconf import ConfRegistry
+from repro.models import zoo
+from repro.optim import adamw
+from repro.serve import Request, ServeEngine
+from repro.serve.kv_cache import KVBlockPool, kv_bytes_per_token
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _weight_bytes(params):
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def test_engine_completes_all_requests(small_model, rng):
+    cfg, params = small_model
+    budget = _weight_bytes(params) + 3_000_000
+    eng = ServeEngine(cfg, params, max_batch=3, cache_len=96,
+                      hbm_budget_bytes=budget, block_tokens=16)
+    for i in range(8):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 20)
+                           .astype(np.int32), 10))
+    for _ in range(80):
+        eng.tick()
+    assert len(eng.finished) == 8
+    assert all(len(r.generated) == 10 for r in eng.finished)
+    assert eng.accountant.violations == 0
+    eng.close()
+
+
+def test_engine_hbm_constraint_respected_under_pressure(small_model, rng):
+    """Tight budget: the interacting queue/KV controllers must keep HBM under
+    the hard goal while still making progress."""
+    cfg, params = small_model
+    budget = _weight_bytes(params) + 600_000   # very tight
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=128,
+                      hbm_budget_bytes=budget, block_tokens=16)
+    for i in range(12):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 32)
+                           .astype(np.int32), 8))
+    for _ in range(200):
+        eng.tick()
+        assert eng.hbm_bytes() <= budget, "hard HBM goal violated"
+    assert len(eng.finished) >= 4, "no progress under budget pressure"
+    eng.close()
+
+
+def test_engine_interacting_controllers_share_metric(small_model):
+    cfg, params = small_model
+    budget = _weight_bytes(params) + 2_000_000
+    reg = ConfRegistry()
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      hbm_budget_bytes=budget, registry=reg)
+    # both PerfConfs registered on hbm_bytes -> interaction factor N = 2
+    peers = reg.peers("hbm_bytes")
+    assert len(peers) == 2
+    assert all(p.controller.n_interacting == 2 for p in peers)
+    eng.close()
+
+
+def test_kv_pool_accounting(small_model):
+    cfg, _ = small_model
+    pool = KVBlockPool(cfg, block_tokens=16, max_blocks=4)
+    assert pool.ensure(1, 20)          # 2 blocks
+    assert pool.used_blocks == 2
+    assert pool.ensure(2, 30)          # 2 more
+    assert not pool.ensure(3, 10)      # budget exhausted
+    assert pool.alloc_failures == 1
+    pool.free(1)
+    assert pool.used_blocks == 2
+    assert pool.ensure(3, 10)
+    assert kv_bytes_per_token(cfg) > 0
+
+
+def test_trainer_runs_and_restarts(small_model):
+    cfg, _ = small_model
+    with tempfile.TemporaryDirectory() as td:
+        tc = TrainerConfig(workdir=td, total_steps=5, ckpt_interval=2,
+                           batch_size=4, seq_len=32)
+        tr = Trainer(cfg, adamw.AdamWConfig(total_steps=5), tc)
+        log = tr.run()
+        assert len(log) == 5
+        assert all(np.isfinite(m["loss"]) for m in log)
+        saved_step = tr.ckpt.last_saved
+        tr.close()
+
+        tr2 = Trainer(cfg, adamw.AdamWConfig(total_steps=5), tc)
+        assert tr2.step == saved_step          # resumed from checkpoint
+        tr2.run(1)
+        assert tr2.step == saved_step + 1
+        tr2.close()
+
+
+def test_trainer_preemption_checkpoints(small_model):
+    cfg, _ = small_model
+    with tempfile.TemporaryDirectory() as td:
+        tc = TrainerConfig(workdir=td, total_steps=50, ckpt_interval=1000,
+                           batch_size=4, seq_len=32)
+        tr = Trainer(cfg, adamw.AdamWConfig(), tc)
+        tr.run(2)
+        tr.preemption.trigger()
+        tr.run(10)   # should stop immediately and emergency-checkpoint
+        assert tr.step == 2
+        assert tr.ckpt.last_saved == 2
+        tr.close()

@@ -1,0 +1,85 @@
+"""The six paper case studies: SmartConf satisfies the constraints the
+defaults break (paper §6.2), across seeds."""
+
+import collections
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import fit_model
+from repro.core import simenv as se
+from repro.core.smartconf import ConfRegistry, SmartConf, SmartConfIndirect
+
+warnings.filterwarnings("ignore", category=RuntimeWarning)
+
+
+def synthesize_policy(env, registry):
+    samples = env.profile(seed=0)
+    grouped = collections.defaultdict(list)
+    vals = sorted(set(c for c, _ in samples))
+    if len(vals) > 24:
+        lo, hi = min(vals), max(vals)
+        width = (hi - lo) / 16 or 1.0
+        for c, p in samples:
+            grouped[lo + (int((c - lo) / width) + 0.5) * width].append(p)
+    else:
+        for c, p in samples:
+            grouped[c].append(p)
+    confs = sorted(grouped)
+    model = fit_model(confs, [grouped[c] for c in confs],
+                      conf_min=env.conf_min, conf_max=env.conf_max,
+                      integer=env.integer)
+    cls = SmartConfIndirect if env.indirect else SmartConf
+    sc = cls("t", metric=env.metric_name, goal=env.goal,
+             initial=env.initial_conf(), model=model, registry=registry)
+    return se.SmartConfPolicy(sc, env.indirect), model
+
+
+@pytest.mark.parametrize("case", list(se.ALL_CASES))
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_smartconf_satisfies_constraint(case, seed):
+    env = se.ALL_CASES[case]()
+    registry = ConfRegistry()
+    pol, model = synthesize_policy(env, registry)
+    tr = env.evaluate(pol, seed=seed)
+    assert not tr.failed, (f"{case} seed {seed}: violations={tr.violations} "
+                           f"first={tr.first_violation}")
+
+
+@pytest.mark.parametrize("case", list(se.ALL_CASES))
+def test_buggy_default_fails(case):
+    env = se.ALL_CASES[case]()
+    tr = env.evaluate(se.StaticPolicy(env.buggy_default), seed=1)
+    assert tr.failed, f"{case}: the reported-buggy default should fail"
+
+
+@pytest.mark.parametrize("case", ["HB2149", "HB6728", "MR2820"])
+def test_patched_default_still_fails(case):
+    """Paper §6.2: even patched defaults fail for several issues."""
+    env = se.ALL_CASES[case]()
+    tr = env.evaluate(se.StaticPolicy(env.patched_default), seed=1)
+    assert tr.failed
+
+
+@pytest.mark.parametrize("case", list(se.ALL_CASES))
+def test_smartconf_tradeoff_competitive(case):
+    """SmartConf's trade-off metric stays within 10% of the hindsight-best
+    static config (and usually beats it)."""
+    env = se.ALL_CASES[case]()
+    registry = ConfRegistry()
+    pol, _ = synthesize_policy(env, registry)
+    tr = env.evaluate(pol, seed=1)
+    _, best = env.best_static(seed=1)
+    assert tr.total_tradeoff >= 0.90 * best.total_tradeoff
+
+
+def test_goal_change_at_phase2_tracked():
+    """HB2149 tightens the latency goal 10s -> 5s mid-run; the controller
+    must track the new goal in phase 2."""
+    env = se.ALL_CASES["HB2149"]()
+    registry = ConfRegistry()
+    pol, _ = synthesize_policy(env, registry)
+    tr = env.evaluate(pol, seed=1)
+    ph2 = tr.metric[260:]
+    assert ph2.mean() <= 5.0 * 1.1
