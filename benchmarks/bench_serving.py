@@ -1,0 +1,129 @@
+"""Serving hot-path benchmark: bucketed/chunked prefill vs. per-length
+compile, on a mixed-prompt-length workload.
+
+This is the first entry in the serving-perf trajectory (ROADMAP): the
+workload substrate the SmartConf serve controllers are evaluated against.
+Rows report, for each prefill mode:
+
+  * prefill jit-compile count (the bucketed path compiles one program per
+    power-of-two bucket; the legacy path one per distinct prompt length),
+  * decode throughput (tokens/s over all decode ticks),
+  * TTFT p50/p99 across requests.
+
+Reduced config on CPU — the *ratios* (compile count, relative tokens/s) are
+the reproducible signal, not absolute microseconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import fmt_row
+
+N_REQUESTS = 24
+MAX_NEW = 8
+MAX_BATCH = 4
+CACHE_LEN = 128
+
+
+def _workload(vocab: int, seed: int = 7):
+    """Mixed lengths: short chat-like, mid, and a long tail."""
+    rng = np.random.default_rng(seed)
+    lengths = np.concatenate([
+        rng.integers(5, 16, N_REQUESTS // 3),
+        rng.integers(16, 48, N_REQUESTS // 3),
+        rng.integers(48, 100, N_REQUESTS - 2 * (N_REQUESTS // 3)),
+    ])
+    rng.shuffle(lengths)
+    return [rng.integers(0, vocab, int(n)).astype(np.int32) for n in lengths]
+
+
+def _run_engine(cfg, params, prompts, mode: str):
+    from repro.serve import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                      enable_smartconf=False, prefill_mode=mode)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, MAX_NEW))
+    t0 = time.perf_counter()
+    ticks = 0
+    while len(eng.finished) < len(prompts) and ticks < 4000:
+        eng.tick()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    assert len(eng.finished) == len(prompts), f"{mode}: incomplete"
+    ttfts = sorted(r.first_token_t - r.submitted_t for r in eng.finished)
+    out = {
+        "ticks": ticks,
+        "wall_s": wall,
+        "prefill_compiles": eng.prefill_compiles,
+        "prefill_calls": eng.prefill_calls,
+        "ttft_p50": ttfts[len(ttfts) // 2],
+        "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+    }
+    eng.close()
+    return out
+
+
+def _decode_throughput(cfg, params, mode: str, n_ticks: int = 60):
+    """Steady-state decode tokens/s at full batch occupancy: all slots
+    prefill first (outside the timed region), then pure decode ticks are
+    timed.  The decode step is shared between modes, so this isolates the
+    donation + deferred-sync hot path from scheduling composition."""
+    from repro.serve import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                      enable_smartconf=False, prefill_mode=mode)
+    rng = np.random.default_rng(11)
+    for i in range(MAX_BATCH):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
+                           .astype(np.int32), CACHE_LEN - 16))
+    eng.tick()                              # prefill + warm the decode compile
+    assert len(eng.running) == MAX_BATCH
+    t0 = time.perf_counter()
+    tokens = sum(eng.tick()["tokens"] for _ in range(n_ticks))
+    tok_s = tokens / (time.perf_counter() - t0)
+    eng.close()
+    return tok_s
+
+
+def run() -> list[str]:
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import zoo
+
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = _workload(cfg.vocab_size)
+    n_lengths = len({len(p) for p in prompts})
+
+    rows = []
+    res = {m: _run_engine(cfg, params, prompts, m)
+           for m in ("legacy", "bucketed")}
+    for mode, r in res.items():
+        rows.append(fmt_row(
+            f"serving_prefill_{mode}", r["wall_s"] / r["ticks"] * 1e6,
+            f"compiles={r['prefill_compiles']} calls={r['prefill_calls']} "
+            f"distinct_lengths={n_lengths}"))
+        tok_s = _decode_throughput(cfg, params, mode)
+        rows.append(fmt_row(
+            f"serving_decode_{mode}", 1e6 / max(tok_s, 1e-9),
+            f"steady_state_tokens_per_s={tok_s:.1f}"))
+        rows.append(fmt_row(
+            f"serving_ttft_{mode}", r["ttft_p50"] * 1e6,
+            f"p50_ms={r['ttft_p50']*1e3:.1f} p99_ms={r['ttft_p99']*1e3:.1f}"))
+    ratio = res["legacy"]["prefill_compiles"] / max(
+        1, res["bucketed"]["prefill_compiles"])
+    rows.append(fmt_row(
+        "serving_compile_reduction", 0.0,
+        f"legacy/bucketed={ratio:.1f}x (goal >=2x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(row)

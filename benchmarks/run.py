@@ -11,6 +11,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
             exist_ok=True)
 
@@ -18,12 +19,13 @@ os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
 def main() -> None:
     from benchmarks import (bench_alternatives, bench_casestudy,
                             bench_compression, bench_interacting,
-                            bench_overhead, bench_roofline, bench_tradeoff)
+                            bench_overhead, bench_roofline, bench_serving,
+                            bench_tradeoff)
 
     print("name,us_per_call,derived")
     for mod in (bench_tradeoff, bench_casestudy, bench_alternatives,
                 bench_interacting, bench_overhead, bench_compression,
-                bench_roofline):
+                bench_serving, bench_roofline):
         for row in mod.run():
             print(row, flush=True)
 

@@ -26,6 +26,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--budget-headroom-mb", type=float, default=2.0)
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=["auto", "bucketed", "legacy"],
+                    help="bucketed = padded power-of-two chunked prefill "
+                         "(compile-count O(log len)); legacy = exact "
+                         "one-shot per prompt length")
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
@@ -37,7 +42,8 @@ def main() -> None:
                   for x in jax.tree.leaves(params))
     budget = int(weights + args.budget_headroom_mb * 1e6)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len, hbm_budget_bytes=budget)
+                      cache_len=args.cache_len, hbm_budget_bytes=budget,
+                      prefill_mode=args.prefill_mode)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -46,10 +52,12 @@ def main() -> None:
     while len(eng.finished) < args.requests and ticks < 2000:
         eng.tick()
         ticks += 1
+    mode = "bucketed" if eng.fused_prefill else "legacy"
     print(f"{cfg.name}: {len(eng.finished)}/{args.requests} done in {ticks} "
           f"ticks; HBM violations {eng.accountant.violations}; "
           f"peak {eng.accountant.peak_bytes/1e6:.1f}/{budget/1e6:.1f} MB; "
-          f"TTFT {eng.ttft.mean()*1e3:.0f}ms")
+          f"TTFT {eng.ttft.mean()*1e3:.0f}ms; prefill[{mode}] "
+          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles")
     eng.close()
 
 

@@ -85,9 +85,9 @@ def block_cache_init(cfg, kind: str, batch: int, seq_len: int):
     if base == "rwkv6":
         return rwkv6_lib.init_state(cfg, batch)
     if base == "rglru":
-        st = rglru_lib.init_state(cfg, batch)
-        st["x_ln"] = jnp.zeros((batch, 0), cfg.dtype)  # placeholder, unused
-        return st
+        # exactly rglru_step's state structure: cache trees from init_cache
+        # and from apply must match for per-slot merges to tree.map
+        return rglru_lib.init_state(cfg, batch)
     raise ValueError(kind)
 
 
@@ -177,13 +177,88 @@ def _write_cache(cache, k, v, positions):
 
 
 # ---------------------------------------------------------------------------
+# apply: prompt chunk against a live cache (chunked / bucketed prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
+                      pos: jax.Array, valid: jax.Array, cache: dict):
+    """x: [B,C,d] padded prompt chunk; pos: [B,C] absolute positions
+    (row-wise contiguous, left-aligned); valid: [B,C] bool marks real
+    tokens (False = pad or inactive slot); cache: attention KV cache.
+
+    Queries attend to (prior cache entries ++ in-chunk keys) under one
+    softmax, so a chunk mid-prompt sees its full history exactly.  Only the
+    last ``min(row_len, ring)`` valid K/V land in the cache (drop-mode
+    scatter), which both respects ring semantics and keeps pad/inactive rows
+    from ever touching cache state.  Dense attention kinds only — recurrent
+    blocks thread state sequentially and cannot skip their pads, and MoE
+    routing would let pads steal expert capacity from real tokens."""
+    base, is_moe = split_kind(kind)
+    if base not in ATTN_KINDS or is_moe:
+        raise ValueError(f"chunked prefill requires dense attention blocks, "
+                         f"got {kind!r}")
+    aux = jnp.zeros((), jnp.float32)
+    theta = _theta(cfg, base)
+    h = apply_norm(cfg.norm, params["ln1"], x)
+    q = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"]),
+                    pos, theta)
+    k = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
+                    pos, theta)
+    v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
+
+    kpos_chunk = jnp.where(valid, pos, -1).astype(jnp.int32)
+    # cache entries at/after the chunk start are stale (a freed slot's
+    # previous occupant); this row's true history is strictly before it
+    kpos_cache = jnp.where(cache["pos"] < pos[:, :1], cache["pos"], -1)
+    k_eff = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+    v_eff = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    kpos_eff = jnp.concatenate([kpos_cache, kpos_chunk], axis=1)
+    window = cfg.window if base in ("swa", "local") else 0
+    o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff, q_pos=pos,
+                               window=window)
+    x = x + layers.attn_output(params["attn"], o)
+
+    # write-back: keep only each row's last min(len, n) valid positions so
+    # ring slots are written at most once per call (scatter stays exact)
+    n = cache["k"].shape[1]
+    row_len = valid.sum(axis=1).astype(jnp.int32)            # [B]
+    last_pos = pos[:, 0] + row_len - 1
+    keep = valid & (pos > (last_pos - n)[:, None])
+    slots = jnp.where(keep, pos % n, n).astype(jnp.int32)    # n => dropped
+    bidx = jnp.arange(x.shape[0])[:, None]
+    cache = {
+        "k": cache["k"].at[bidx, slots].set(
+            k.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[bidx, slots].set(
+            v.astype(cache["v"].dtype), mode="drop"),
+        "pos": cache["pos"].at[bidx, slots].set(
+            pos.astype(jnp.int32), mode="drop"),
+    }
+
+    h2 = apply_norm(cfg.norm, params["ln2"], x)
+    x = x + layers.mlp(params["mlp"], h2, cfg.mlp)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
 # apply: single decode step
 # ---------------------------------------------------------------------------
 
 
+def _keep_active(active, new_state, old_state):
+    """Per-row select so inactive slots' recurrent state stays untouched."""
+    def sel(new, old):
+        a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(a, new.astype(old.dtype), old)
+    return jax.tree.map(sel, new_state, old_state)
+
+
 def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
-                     pos: jax.Array, cache: dict):
-    """x: [B,1,d]; pos: [B] absolute position of this token."""
+                     pos: jax.Array, cache: dict, active=None):
+    """x: [B,1,d]; pos: [B] absolute position of this token.  ``active``
+    ([B] bool, optional) masks cache/state writes for slots that are not
+    decoding this tick (free, or mid chunked-prefill)."""
     base, is_moe = split_kind(kind)
     aux = jnp.zeros((), jnp.float32)
 
@@ -195,12 +270,17 @@ def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
         h2 = apply_norm(cfg.norm, params["ln2"], x)[:, 0]
         cm_out, cm_last = rwkv6_lib.channel_mix(p, h2, cache["cm_last"])
         x = x + cm_out[:, None, :]
-        return x, {"S": S_new, "tm_last": tm_last, "cm_last": cm_last}, aux
+        new_cache = {"S": S_new, "tm_last": tm_last, "cm_last": cm_last}
+        if active is not None:
+            new_cache = _keep_active(active, new_cache, cache)
+        return x, new_cache, aux
 
     if base == "rglru":
         h = apply_norm(cfg.norm, params["ln1"], x)[:, 0]
         y, st_new = rglru_lib.rglru_step(params["rglru"], h, cache)
         x = x + y[:, None, :]
+        if active is not None:
+            st_new = _keep_active(active, st_new, cache)
         new_cache = st_new
     else:
         theta = _theta(cfg, base)
@@ -213,10 +293,13 @@ def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
         v_t = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
         n = cache["k"].shape[1]
         slot = (pos % n).astype(jnp.int32)                    # ring or direct
+        if active is not None:
+            slot = jnp.where(active, slot, n)                 # n => dropped
         bidx = jnp.arange(x.shape[0])
-        kc = cache["k"].at[bidx, slot].set(k_t[:, 0])
-        vc = cache["v"].at[bidx, slot].set(v_t[:, 0])
-        pc = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        kc = cache["k"].at[bidx, slot].set(k_t[:, 0], mode="drop")
+        vc = cache["v"].at[bidx, slot].set(v_t[:, 0], mode="drop")
+        pc = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32),
+                                             mode="drop")
         window = cfg.window if base in ("swa", "local") else 0
         o = layers.decode_attention(q, kc, vc, k_pos=pc, q_pos=pos,
                                     window=window)

@@ -213,16 +213,32 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                      window: int = 0) -> jax.Array:
     """One-token attention against a cache.  q [B,1,H,D], caches [B,S,Kv,D].
     ``k_pos`` [B or 1, S] gives each slot's absolute position; unwritten or
-    out-of-window slots are masked via position validity (pos >= 0)."""
+    out-of-window slots are masked via position validity (pos >= 0).  The
+    C=1 case of :func:`chunk_attention` — one masking implementation keeps
+    decode and chunked prefill in exact agreement."""
+    return chunk_attention(q, k_cache, v_cache, k_pos=k_pos,
+                           q_pos=q_pos[:, None], window=window)
+
+
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    k_pos: jax.Array, q_pos: jax.Array,
+                    window: int = 0) -> jax.Array:
+    """Multi-token attention against per-row positioned keys (chunked
+    prefill).  q [B,C,H,D]; k,v [B,N,Kv,D]; k_pos [B,N] absolute slot
+    positions (-1 = unwritten); q_pos [B,C] absolute query positions.
+
+    The causal/window structure is carried entirely by the position arrays,
+    so the same code attends a prompt chunk against (prior-chunk cache ++
+    in-chunk keys) with exact masking."""
     scale = q.shape[-1] ** -0.5
-    s = _grouped_scores(q * scale, k_cache).astype(jnp.float32)  # [B,H,1,S]
-    valid = k_pos >= 0
-    valid &= k_pos <= q_pos[:, None]
+    s = _grouped_scores(q * scale, k).astype(jnp.float32)   # [B,H,C,N]
+    valid = k_pos[:, None, :] >= 0                           # [B,C,N]
+    valid &= k_pos[:, None, :] <= q_pos[:, :, None]
     if window > 0:
-        valid &= (q_pos[:, None] - k_pos) < window
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+        valid &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(valid[:, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    return _grouped_out(p, v_cache)
+    return _grouped_out(p, v)
 
 
 def attn_project_q(params, x, *, positions, theta):

@@ -237,7 +237,8 @@ def moe_apply_ep(params: dict, x: jax.Array, cfg, *, return_aux: bool = False):
     """shard_map expert-parallel MoE.  Falls back to :func:`moe_apply` when
     no mesh with a 'model' axis is active or experts don't divide it."""
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import current_mesh, logical_spec
+    from repro.distributed.sharding import (current_mesh, logical_spec,
+                                            shard_map)
 
     mesh = current_mesh()
     if (mesh is None or "model" not in mesh.axis_names
@@ -248,7 +249,7 @@ def moe_apply_ep(params: dict, x: jax.Array, cfg, *, return_aux: bool = False):
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_moe_local, cfg=cfg, e_local=e_local, axis_name="model"),
         mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
@@ -351,7 +352,7 @@ def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
 def moe_apply_ep_serve(params: dict, x: jax.Array, cfg):
     """Decode-time EP: resident weights, token gather (see _moe_local_serve)."""
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import current_mesh
+    from repro.distributed.sharding import current_mesh, shard_map
 
     mesh = current_mesh()
     dp_axes = tuple(a for a in ("pod", "data") if a in (mesh.axis_names if mesh else ()))
@@ -364,7 +365,7 @@ def moe_apply_ep_serve(params: dict, x: jax.Array, cfg):
     batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
     dspec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_moe_local_serve, cfg=cfg, e_local=e_local, dp_axes=dp_axes),
         mesh=mesh,
         in_specs=(P(), P("model", None, dspec), P("model", None, dspec),

@@ -11,6 +11,8 @@ Public entry points (all pure):
     forward(cfg, params, batch)         -> logits | hidden
     loss_fn(cfg, params, batch)         -> (loss, aux)     [chunked CE]
     prefill(cfg, params, batch, cache_len) -> (last_logits, caches)
+    prefill_chunk(cfg, params, caches, tokens, start, lengths)
+                                        -> (last_logits, caches)  [in-place]
     decode_step(cfg, params, caches, token, pos) -> (logits, caches)
     init_cache(cfg, batch, cache_len)   -> caches
 """
@@ -377,9 +379,70 @@ def prefill(cfg, params, batch, *, cache_len: int):
     return logits, caches
 
 
-def decode_step(cfg, params, caches, token, pos):
-    """token: [B] int32; pos: [B] absolute position.  Returns (logits [B,V],
-    caches')."""
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked/bucketed (padded) prefill needs every block to be position-
+    maskable: attention kinds only.  Recurrent blocks (rwkv6/rglru) thread
+    state through pad tokens, the vision/encoder-decoder frontends carry
+    unpadded prefixes, and MoE routing lets pad tokens steal expert capacity
+    from real ones, so those families keep the exact one-shot path."""
+    if cfg.encoder_decoder or cfg.frontend == "vision" or cfg.moe:
+        return False
+    kinds = set(cfg.block_pattern) | {k for k in
+                                      (_plan(cfg)[0] or ())}
+    return all(B.split_kind(k)[0] in B.ATTN_KINDS for k in kinds)
+
+
+def prefill_chunk(cfg, params, caches, tokens, start, lengths):
+    """Advance prefill by one padded chunk per batch row, in place.
+
+    tokens: [B,C] int32 (row-wise left-aligned, zero-padded); start: [B]
+    absolute position of each row's first chunk token; lengths: [B] valid
+    tokens this chunk (0 = inactive row: no cache writes, garbage logits).
+    Returns (next-token logits [B,V] at each row's last valid position,
+    caches).  Chunks attend to prior chunks through the cache, so calling
+    this repeatedly over a long prompt is exact chunked prefill."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
+                         "does not support chunked prefill")
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    b, c = tokens.shape
+    pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]   # [B,C]
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < lengths[:, None]
+    x = params["embed"][tokens]
+
+    for j, kind in enumerate(prefix):
+        x, caches["prefix"][j], _ = B.block_apply_chunk(
+            cfg, kind, params["prefix"][j], x, pos, valid, caches["prefix"][j])
+
+    if n_groups:
+        def group_body(x, xs):
+            gp, gc = xs
+            new_c = []
+            for j, kind in enumerate(pattern):
+                x, cj, _ = B.block_apply_chunk(cfg, kind, gp[j], x, pos,
+                                               valid, gc[j])
+                new_c.append(cj)
+            return x, new_c
+
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], caches["groups"]))
+        caches["groups"] = new_groups
+
+    for j, kind in enumerate(rem):
+        x, caches["rem"][j], _ = B.block_apply_chunk(
+            cfg, kind, params["rem"][j], x, pos, valid, caches["rem"][j])
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    last = jnp.clip(lengths - 1, 0, c - 1)
+    xl = x[jnp.arange(b), last][:, None, :]                  # [B,1,d]
+    logits = _logits(cfg, params, xl)[:, 0]
+    return logits, caches
+
+
+def decode_step(cfg, params, caches, token, pos, active=None):
+    """token: [B] int32; pos: [B] absolute position.  ``active`` ([B] bool,
+    optional) masks cache/state writes for non-decoding slots.  Returns
+    (logits [B,V], caches')."""
     prefix, pattern, n_groups, rem = _plan(cfg)
     x = params["embed"][token][:, None, :]                # [B,1,d]
     if "pos_emb" in params:
@@ -408,7 +471,8 @@ def decode_step(cfg, params, caches, token, pos):
 
     for j, kind in enumerate(prefix):
         x, caches["prefix"][j], _ = B.block_apply_step(
-            cfg, kind, params["prefix"][j], x, pos, caches["prefix"][j])
+            cfg, kind, params["prefix"][j], x, pos, caches["prefix"][j],
+            active=active)
         x = maybe_cross(x, layer_idx)
         layer_idx += 1
 
@@ -418,7 +482,8 @@ def decode_step(cfg, params, caches, token, pos):
             gp, gc = xs
             new_c = []
             for j, kind in enumerate(pattern):
-                x, cj, _ = B.block_apply_step(cfg, kind, gp[j], x, pos, gc[j])
+                x, cj, _ = B.block_apply_step(cfg, kind, gp[j], x, pos, gc[j],
+                                              active=active)
                 if enc_out is not None:
                     x = maybe_cross(x, li + j)
                 new_c.append(cj)
@@ -431,7 +496,8 @@ def decode_step(cfg, params, caches, token, pos):
 
     for j, kind in enumerate(rem):
         x, caches["rem"][j], _ = B.block_apply_step(
-            cfg, kind, params["rem"][j], x, pos, caches["rem"][j])
+            cfg, kind, params["rem"][j], x, pos, caches["rem"][j],
+            active=active)
         x = maybe_cross(x, layer_idx)
         layer_idx += 1
 

@@ -9,13 +9,16 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from . import transformer
 
-__all__ = ["init", "loss_fn", "forward", "prefill", "decode_step",
-           "init_cache", "make_batch", "input_specs"]
+__all__ = ["init", "loss_fn", "forward", "prefill", "prefill_chunk",
+           "supports_chunked_prefill", "decode_step", "init_cache",
+           "make_batch", "input_specs"]
 
 init = transformer.init
 loss_fn = transformer.loss_fn
 forward = transformer.forward
 prefill = transformer.prefill
+prefill_chunk = transformer.prefill_chunk
+supports_chunked_prefill = transformer.supports_chunked_prefill
 decode_step = transformer.decode_step
 init_cache = transformer.init_cache
 

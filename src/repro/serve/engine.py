@@ -12,11 +12,34 @@ share the hard ``hbm_bytes`` constraint —
 Both are ``super_hard`` on the same metric, so their controllers split the
 error via the §5.4 interaction factor (N = 2).  A third, soft PerfConf
 ``serve.prefill_chunk_tokens`` bounds decode-latency interference from long
-prefills (HB2149-style trade-off).
+prefills (HB2149-style trade-off) by capping how many prompt tokens one
+prefill call may process before decode runs again.
 
-Engine loop (one `tick`):
-  admission -> scheduling (chunked prefill, KV allocation) -> fused decode
-  step over all running slots -> completion/free -> controller updates.
+Hot path (one `tick`):
+  admission -> scheduling (slot + KV allocation) -> ONE bucketed chunked
+  prefill call advancing every prefilling slot -> ONE fused decode step over
+  all running slots -> completion/free -> controller updates.
+
+Hot-path design (the serving-perf tentpole):
+  * **Length-bucketed prefill** — prompt chunks are padded to power-of-two
+    buckets and batched across slots into a single ``prefill_chunk`` call at
+    engine batch width, so the jit cache holds one entry per *bucket*
+    instead of one per distinct prompt length.
+  * **Real chunked prefill** — at most ``prefill_chunk`` prompt tokens are
+    prefilled per tick; long prompts spread over several ticks interleaved
+    with decode, so the SmartConf soft knob actuates observable behavior.
+  * **Cache donation / in-place writes** — prefill and decode steps donate
+    the fused KV cache (and the device-side token buffers), and chunked
+    prefill scatters K/V straight into the donated cache; the legacy
+    one-shot path merges per slot via ``dynamic_update_slice`` rather than
+    copying the whole tree.
+  * **Deferred host sync** — sampled tokens stay on device between ticks
+    (token ring in ``_gen_buf``); the host reads a sequence back exactly
+    once, at its completion boundary.
+
+Models whose blocks cannot be position-masked (recurrent, MoE routing,
+modality prefixes) keep the exact one-shot prefill path automatically
+(``prefill_mode="auto"``).
 """
 
 from __future__ import annotations
@@ -36,9 +59,17 @@ from repro.core import (ControllerModel, GoalSpec, HBMAccountant,
                         ThroughputSensor)
 from repro.core.smartconf import ConfRegistry
 from repro.models import zoo
-from .kv_cache import KVBlockPool, kv_bytes_per_token
+from .kv_cache import KVBlockPool, kv_bytes_per_token, QUEUE_TOKEN_BYTES
 
 __all__ = ["Request", "ServeEngine"]
+
+_MIN_BUCKET = 16
+
+
+def _bucket(n: int) -> int:
+    """Smallest power-of-two >= n (floored at _MIN_BUCKET): the padded
+    prefill width, so the jit cache is keyed by O(log max_len) shapes."""
+    return max(_MIN_BUCKET, 1 << (max(1, n) - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -53,6 +84,8 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     slot: int | None = None
     prefilled: int = 0          # prompt tokens already prefilled (chunking)
+    prefill_chunks: int = 0     # chunk calls this request's prefill spanned
+    gen_count: int = 0          # tokens generated (device-resident until done)
 
 
 class ServeEngine:
@@ -61,12 +94,22 @@ class ServeEngine:
                  block_tokens: int = 16, enable_smartconf: bool = True,
                  latency_goal_s: float | None = None,
                  registry: ConfRegistry | None = None,
+                 prefill_mode: str = "auto",
                  clock: Callable[[], float] = time.monotonic) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.clock = clock
+
+        if prefill_mode not in ("auto", "bucketed", "legacy"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if prefill_mode == "bucketed" and not zoo.supports_chunked_prefill(cfg):
+            raise ValueError(
+                f"{cfg.name}: block pattern {cfg.block_pattern} does not "
+                "support bucketed (chunked) prefill; use prefill_mode='auto'")
+        self.fused_prefill = (prefill_mode == "bucketed" or (
+            prefill_mode == "auto" and zoo.supports_chunked_prefill(cfg)))
 
         self.accountant = HBMAccountant(budget_bytes=hbm_budget_bytes)
         weight_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
@@ -81,19 +124,63 @@ class ServeEngine:
         self.waiting: collections.deque[Request] = collections.deque()
         self.queued: collections.deque[Request] = collections.deque()
         self.queued_tokens = 0
+        self.prefilling: dict[int, Request] = {}
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.rejected = 0
-        self._next_slot = list(range(max_batch))
+        self._free_slots = collections.deque(range(max_batch))
+        self.prefill_calls = 0
+        self._prefill_shapes: set[int] = set()
 
-        # model caches (one fused batch across slots)
+        # device-resident hot state (one fused batch across slots); the
+        # host only keeps positions/counters, never token values
         self.caches = zoo.init_cache(cfg, max_batch, cache_len)
         self.slot_pos = np.full((max_batch,), -1, np.int64)
-        self.slot_tokens = np.zeros((max_batch,), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, q: zoo.decode_step(cfg, p, c, t, q))
+        self._slot_tok = jnp.zeros((max_batch,), jnp.int32)
+        self._gen_buf = jnp.zeros((max_batch, cache_len), jnp.int32)
+
+        def decode_fn(p, c, tok, pos, active, gbuf, gidx):
+            logits, c = zoo.decode_step(cfg, p, c, tok, pos, active=active)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok)
+            gbuf = gbuf.at[jnp.arange(tok.shape[0]), gidx].set(
+                nxt, mode="drop")
+            return tok, c, gbuf
+
+        def prefill_chunk_fn(p, c, tokens, start, lengths, done, tok, gbuf):
+            logits, c = zoo.prefill_chunk(cfg, p, c, tokens, start, lengths)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(done, first, tok)
+            slot0 = jnp.where(done, 0, gbuf.shape[1])
+            gbuf = gbuf.at[jnp.arange(tok.shape[0]), slot0].set(
+                first, mode="drop")
+            return c, tok, gbuf
+
+        def merge_fn(full, one, slot):
+            def merge(f, o):
+                axis = None
+                for i, (fs, os) in enumerate(zip(f.shape, o.shape)):
+                    if os == 1 and fs == self.max_batch:
+                        axis = i
+                        break
+                    if fs != os:
+                        return f  # shape mismatch (e.g. enc_out cache len)
+                if axis is None:
+                    return f
+                starts = tuple(slot if i == axis else 0
+                               for i in range(f.ndim))
+                return jax.lax.dynamic_update_slice(
+                    f, o.astype(f.dtype), starts)
+            return jax.tree.map(merge, full, one)
+
+        # donated args: the fused cache + device token buffers are consumed
+        # and returned every call, so XLA reuses their buffers in place
+        self._decode = jax.jit(decode_fn, donate_argnums=(1, 2, 5))
+        self._prefill_chunk = jax.jit(prefill_chunk_fn,
+                                      donate_argnums=(1, 6, 7))
         self._prefill = jax.jit(
             lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
+        self._merge = jax.jit(merge_fn, donate_argnums=(0,))
 
         # sensors
         self.decode_latency = LatencySensor()
@@ -108,19 +195,21 @@ class ServeEngine:
         self.sc_kv = None
         self.sc_chunk = None
         if enable_smartconf and hbm_budget_bytes:
-            token_bytes = 8  # queue holds int32 prompt+label views per token
             goal = GoalSpec(float(hbm_budget_bytes), hard=True,
                             super_hard=True)
             self.sc_queue = SmartConfIndirect(
                 "serve.max_queue_tokens", metric="hbm_bytes", goal=goal,
                 initial=0.0, registry=self.registry,
-                model=ControllerModel(alpha=float(token_bytes), lam=0.05,
-                                      delta=1.15, conf_min=0.0,
+                model=ControllerModel(alpha=float(QUEUE_TOKEN_BYTES),
+                                      lam=0.05, delta=1.15, conf_min=0.0,
                                       conf_max=1e9))
+            # attention-free archs have block_bytes == 0 (O(1) state); floor
+            # the gain so the controller degrades to a no-op instead of a
+            # divide-by-zero
             self.sc_kv = SmartConfIndirect(
                 "serve.kv_block_budget", metric="hbm_bytes", goal=goal,
                 initial=1.0, registry=self.registry,
-                model=ControllerModel(alpha=float(self.pool.block_bytes),
+                model=ControllerModel(alpha=float(max(1, self.pool.block_bytes)),
                                       lam=0.05, delta=1.15, conf_min=1.0,
                                       conf_max=1e9))
             if latency_goal_s is not None:
@@ -135,12 +224,31 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
-        req.prompt_bytes = int(req.prompt.nbytes * 2)
+        npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
+        total = npatch + len(req.prompt) + req.max_new_tokens
+        if total > self.cache_len:
+            # beyond cache_len the KV ring wraps (prompt history or sampled
+            # tokens silently fall out) — reject loudly instead
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new_tokens "
+                f"({req.max_new_tokens})"
+                + (f" + patches ({npatch})" if npatch else "")
+                + f" exceeds cache_len={self.cache_len}")
+        req.prompt_bytes = len(req.prompt) * QUEUE_TOKEN_BYTES
         req.submitted_t = self.clock()
         self.waiting.append(req)
 
     def hbm_bytes(self) -> int:
         return self.accountant.total()
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill programs compiled so far: one per padded bucket
+        width (fused) or per distinct prompt length (legacy).  Tracked by
+        input shape on the engine side (the jitted callables are per-engine
+        lambdas, so shape count == jit cache size) to avoid depending on
+        private jax cache introspection."""
+        return len(self._prefill_shapes)
 
     # ------------------------------------------------------------- one tick
     def tick(self) -> dict:
@@ -148,11 +256,13 @@ class ServeEngine:
         self._update_controllers()
         self._admit()
         self._schedule()
+        self._prefill_tick()
         n_tokens = self._decode_tick()
         self._finish()
         self.decode_latency.record(self.clock() - t0)
         return {
-            "queued": len(self.queued), "running": len(self.running),
+            "queued": len(self.queued),
+            "running": len(self.running) + len(self.prefilling),
             "finished": len(self.finished), "hbm": self.hbm_bytes(),
             "tokens": n_tokens,
         }
@@ -174,8 +284,7 @@ class ServeEngine:
             self.prefill_chunk = max(1, int(self.sc_chunk.get_conf()))
 
     def _admit(self) -> None:
-        moved = True
-        while moved and self.waiting:
+        while self.waiting:
             req = self.waiting[0]
             if self.queued_tokens + len(req.prompt) > self.max_queue_tokens:
                 break
@@ -183,10 +292,9 @@ class ServeEngine:
             self.queued.append(req)
             self.queued_tokens += len(req.prompt)
             self.accountant.charge("queue", req.prompt_bytes)
-            moved = True
 
     def _schedule(self) -> None:
-        while self.queued and self._next_slot:
+        while self.queued and self._free_slots:
             req = self.queued[0]
             total = len(req.prompt) + req.max_new_tokens
             if not self.pool.ensure(req.req_id, min(total, self.cache_len)):
@@ -194,12 +302,59 @@ class ServeEngine:
             self.queued.popleft()
             self.queued_tokens -= len(req.prompt)
             self.accountant.credit("queue", req.prompt_bytes)
-            req.slot = self._next_slot.pop(0)
-            self._do_prefill(req)
-            self.running[req.slot] = req
+            req.slot = self._free_slots.popleft()
+            if self.fused_prefill:
+                self.prefilling[req.slot] = req
+            else:
+                self._do_prefill_legacy(req)
+                self.running[req.slot] = req
 
-    def _do_prefill(self, req: Request) -> None:
-        """Prefill the whole prompt (chunk bookkeeping records interference)."""
+    # ----------------------------------------------- bucketed chunked prefill
+    def _prefill_tick(self) -> None:
+        """Advance every prefilling slot by one chunk in a single padded
+        call.  The chunk width is the power-of-two bucket covering the
+        largest chunk this tick, so mixed prompt lengths reuse compiles."""
+        if not self.prefilling:
+            return
+        cap = max(1, int(self.prefill_chunk))
+        width = _bucket(max(min(len(r.prompt) - r.prefilled, cap)
+                            for r in self.prefilling.values()))
+        tokens = np.zeros((self.max_batch, width), np.int32)
+        start = np.zeros((self.max_batch,), np.int32)
+        lengths = np.zeros((self.max_batch,), np.int32)
+        done = np.zeros((self.max_batch,), bool)
+        for slot, req in self.prefilling.items():
+            n = min(len(req.prompt) - req.prefilled, cap, width)
+            tokens[slot, :n] = req.prompt[req.prefilled:req.prefilled + n]
+            start[slot] = req.prefilled
+            lengths[slot] = n
+            done[slot] = req.prefilled + n >= len(req.prompt)
+        self.caches, self._slot_tok, self._gen_buf = self._prefill_chunk(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(start), jnp.asarray(lengths), jnp.asarray(done),
+            self._slot_tok, self._gen_buf)
+        self.prefill_calls += 1
+        self._prefill_shapes.add(width)
+        if done.any():
+            # a first token is a completion boundary: wait for the device
+            # (no host transfer) so TTFT reflects compute, not dispatch
+            self._slot_tok.block_until_ready()
+        now = self.clock()
+        for slot in list(self.prefilling):
+            req = self.prefilling[slot]
+            req.prefilled += int(lengths[slot])
+            req.prefill_chunks += 1
+            if done[slot]:
+                req.gen_count = 1            # first token is on device
+                req.first_token_t = now
+                self.ttft.record(now - req.submitted_t)
+                self.slot_pos[slot] = len(req.prompt)
+                self.running[slot] = self.prefilling.pop(slot)
+
+    # ------------------------------------------------ legacy one-shot prefill
+    def _do_prefill_legacy(self, req: Request) -> None:
+        """Exact whole-prompt prefill for families the padded path can't
+        serve (recurrent state, MoE routing, modality prefixes)."""
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
         batch = {"tokens": prompt}
         if self.cfg.frontend == "vision":
@@ -209,59 +364,65 @@ class ServeEngine:
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
         logits, one_cache = self._prefill(self.params, batch)
-        self._merge_cache(one_cache, req.slot)
+        self.caches = self._merge(self.caches, one_cache,
+                                  jnp.asarray(req.slot, jnp.int32))
+        self.prefill_calls += 1
+        self._prefill_shapes.add(len(req.prompt))
         first = int(jnp.argmax(logits[0]))
-        req.generated.append(first)
+        self._slot_tok = self._slot_tok.at[req.slot].set(first)
+        self._gen_buf = self._gen_buf.at[req.slot, 0].set(first)
+        req.gen_count = 1
+        req.prefilled = len(req.prompt)
+        req.prefill_chunks = 1
         req.first_token_t = self.clock()
         self.ttft.record(req.first_token_t - req.submitted_t)
         npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
         self.slot_pos[req.slot] = len(req.prompt) + npatch
-        self.slot_tokens[req.slot] = first
-        req.prefilled = len(req.prompt)
 
-    def _merge_cache(self, one_cache, slot: int) -> None:
-        def merge(full, one):
-            axis = None
-            for i, (f, o) in enumerate(zip(full.shape, one.shape)):
-                if o == 1 and f == self.max_batch:
-                    axis = i
-                    break
-                if f != o:
-                    return full  # shape mismatch (e.g. enc_out cache len)
-            if axis is None:
-                return full
-            idx = [slice(None)] * full.ndim
-            idx[axis] = slice(slot, slot + 1)
-            return full.at[tuple(idx)].set(one.astype(full.dtype))
-
-        self.caches = jax.tree.map(merge, self.caches, one_cache)
-
+    # --------------------------------------------------------------- decode
     def _decode_tick(self) -> int:
         if not self.running:
             return 0
-        tok = jnp.asarray(self.slot_tokens)
+        active = np.zeros((self.max_batch,), bool)
+        gidx = np.full((self.max_batch,), self.cache_len, np.int32)
+        for slot, req in self.running.items():
+            active[slot] = True
+            gidx[slot] = min(req.gen_count, self.cache_len)  # ==len => drop
         pos = jnp.asarray(np.maximum(self.slot_pos, 0).astype(np.int32))
-        logits, self.caches = self._decode(self.params, self.caches, tok, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._slot_tok, self.caches, self._gen_buf = self._decode(
+            self.params, self.caches, self._slot_tok, pos,
+            jnp.asarray(active), self._gen_buf, jnp.asarray(gidx))
+        # wait for device compute (still no host transfer) so the tick
+        # latency sensor — and the sc_chunk controller acting on its p99 —
+        # measures real decode time, not async dispatch depth
+        self._slot_tok.block_until_ready()
         n = 0
-        for slot, req in list(self.running.items()):
+        for slot, req in self.running.items():
             self.slot_pos[slot] += 1
-            self.slot_tokens[slot] = nxt[slot]
-            req.generated.append(int(nxt[slot]))
+            req.gen_count += 1
             n += 1
         self.throughput.record(n)
         return n
 
     def _finish(self) -> None:
-        for slot, req in list(self.running.items()):
-            if len(req.generated) >= req.max_new_tokens:
-                req.done_t = self.clock()
-                self.finished.append(req)
-                del self.running[slot]
-                self._next_slot.append(slot)
-                self.pool.free(req.req_id)
-                self.slot_pos[slot] = -1
-                self.slot_tokens[slot] = 0
+        done = [(s, r) for s, r in self.running.items()
+                if r.gen_count >= r.max_new_tokens]
+        if not done:
+            return
+        # completion boundary: the only device->host token sync in the loop
+        gen = np.asarray(self._gen_buf)
+        for slot, req in done:
+            req.done_t = self.clock()
+            # the prefill tick also decodes, so gen_count can overshoot
+            # max_new_tokens by one — cap the readback at the request
+            req.generated = [int(t) for t in
+                             gen[slot, :min(req.gen_count,
+                                            req.max_new_tokens)]]
+            self.finished.append(req)
+            del self.running[slot]
+            self._free_slots.append(slot)
+            self.pool.free(req.req_id)
+            self.slot_pos[slot] = -1
 
     def close(self) -> None:
         for sc in (self.sc_queue, self.sc_kv, self.sc_chunk):

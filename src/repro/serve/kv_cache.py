@@ -14,7 +14,14 @@ import dataclasses
 from repro.configs.base import ArchConfig
 from repro.core.sensors import HBMAccountant
 
-__all__ = ["KVBlockPool", "kv_bytes_per_token"]
+__all__ = ["KVBlockPool", "kv_bytes_per_token", "QUEUE_TOKEN_BYTES"]
+
+# Host+device bytes one *queued* prompt token holds (int32 token + int32
+# label/scratch view).  Both the admission-queue deputy accounting in
+# ``ServeEngine.submit`` and the ``serve.max_queue_tokens`` controller gain
+# (alpha = bytes released per queued token shed) derive from this constant,
+# so the deputy metric and the controller model can never drift apart.
+QUEUE_TOKEN_BYTES = 8
 
 
 def kv_bytes_per_token(cfg: ArchConfig) -> int:

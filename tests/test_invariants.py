@@ -4,6 +4,9 @@ block pool ledger, and the prefetch queue accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, reduced

@@ -81,6 +81,57 @@ def test_prefill_decode_equals_forward(arch_id, rng):
     assert err < 5e-3, f"{arch_id}: prefill/decode mismatch rel={err:.2e}"
 
 
+@pytest.mark.parametrize("arch_id,chunk", [
+    ("yi-6b", 8),                # full attention, multi-chunk
+    ("h2o-danube-3-4b", 8),      # swa ring cache, chunk < window
+    ("h2o-danube-3-4b", 48),     # chunk > ring size (write-back tail)
+    ("gemma3-4b", 16),           # local/global mixed pattern
+])
+def test_chunked_prefill_matches_one_shot(arch_id, chunk, rng):
+    """Padded, bucketed, chunk-at-a-time prefill into a live fused cache must
+    reproduce the one-shot prefill logits and leave an equivalent cache."""
+    cfg = _smoke_cfg(arch_id)
+    assert transformer.supports_chunked_prefill(cfg)
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    L, cache_len = 50, 64
+    prompt = rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+    ref_logits, ref_caches = transformer.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt[None])},
+        cache_len=cache_len)
+
+    # two fused rows: row 0 carries the prompt, row 1 stays inactive
+    caches = zoo.init_cache(cfg, 2, cache_len)
+    logits = None
+    for s in range(0, L, chunk):
+        n = min(chunk, L - s)
+        tok = np.zeros((2, chunk), np.int32)
+        tok[0, :n] = prompt[s:s + n]
+        logits, caches = transformer.prefill_chunk(
+            cfg, params, caches, jnp.asarray(tok),
+            jnp.asarray([s, 0], jnp.int32), jnp.asarray([n, 0], jnp.int32))
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits[0] - ref_logits[0]))) / scale
+    assert err < 5e-3, f"{arch_id} chunk={chunk}: prefill rel={err:.2e}"
+
+    # decode one step from both caches; the inactive row must not interfere
+    tok = jnp.asarray([int(jnp.argmax(ref_logits[0]))] * 2, jnp.int32)
+    d_ref, _ = transformer.decode_step(cfg, params, ref_caches, tok[:1],
+                                       jnp.asarray([L], jnp.int32))
+    d_chk, _ = transformer.decode_step(cfg, params, caches, tok,
+                                       jnp.asarray([L, 0], jnp.int32),
+                                       active=jnp.asarray([True, False]))
+    scale = float(jnp.max(jnp.abs(d_ref))) + 1e-9
+    err = float(jnp.max(jnp.abs(d_chk[0] - d_ref[0]))) / scale
+    assert err < 5e-3, f"{arch_id} chunk={chunk}: decode rel={err:.2e}"
+
+
+def test_chunked_prefill_gates_unsupported():
+    for arch_id in ("rwkv6-7b", "recurrentgemma-9b", "deepseek-moe-16b",
+                    "whisper-tiny", "internvl2-1b"):
+        assert not transformer.supports_chunked_prefill(
+            reduced(get_config(arch_id))), arch_id
+
+
 def test_moe_matches_reference(rng):
     from repro.models import moe as moe_lib
     cfg = _smoke_cfg("deepseek-moe-16b")

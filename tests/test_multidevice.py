@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map  # version-compat alias
+
 assert len(jax.devices()) == 8
 
 # ---- 1. compressed gradient all-reduce over a mesh axis -------------------
@@ -30,13 +32,13 @@ grads = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 7.0}
 def f(g):
     return compressed_psum_grads(g, "data")
 
-out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=({"w": P("data", None)},),
+out = jax.jit(shard_map(f, mesh=mesh, in_specs=({"w": P("data", None)},),
                             out_specs={"w": P("data", None)}))(grads)
 # mean over the axis of identical shards... each shard holds a distinct row
 # block; psum-mean of distinct contributions: compare against exact mean
 def exact(g):
     return jax.tree.map(lambda x: jax.lax.pmean(x, "data"), g)
-ref = jax.jit(jax.shard_map(exact, mesh=mesh, in_specs=({"w": P("data", None)},),
+ref = jax.jit(shard_map(exact, mesh=mesh, in_specs=({"w": P("data", None)},),
                             out_specs={"w": P("data", None)}))(grads)
 err = float(jnp.max(jnp.abs(out["w"] - ref["w"])))
 rng_scale = float(jnp.max(jnp.abs(ref["w"]))) + 1e-9
@@ -70,7 +72,7 @@ def sp_decode(q, k, v, kpos, qpos):
     o = jnp.einsum("bhs,bhsd->bhd", p, vv)
     return sp_decode_combine(o, m, l, "model")
 
-got = jax.jit(jax.shard_map(
+got = jax.jit(shard_map(
     sp_decode, mesh=mesh2,
     in_specs=(P(), P(None, None, "model", None), P(None, None, "model", None),
               P(None, "model"), P()),

@@ -74,6 +74,60 @@ def test_engine_interacting_controllers_share_metric(small_model):
     eng.close()
 
 
+def test_chunked_prefill_interleaves_decode(small_model, rng):
+    """A prompt longer than ``serve.prefill_chunk_tokens`` must prefill over
+    multiple chunk calls, with decode ticks for other slots in between — the
+    SmartConf soft knob actuates real scheduling behavior."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      enable_smartconf=False, prefill_mode="bucketed")
+    eng.prefill_chunk = 16          # the soft-knob actuation point
+    short = Request(0, rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 30)
+    eng.submit(short)
+    eng.tick()                      # short req prefills whole and starts decoding
+    assert short.gen_count >= 1 and short.prefill_chunks == 1
+    long = Request(1, rng.integers(0, cfg.vocab_size, 60).astype(np.int32), 4)
+    eng.submit(long)
+    decoded_during_prefill = []
+    while long.prefilled < len(long.prompt):
+        before = short.gen_count
+        eng.tick()
+        decoded_during_prefill.append(short.gen_count - before)
+    assert long.prefill_chunks == 4          # ceil(60 / 16) chunk calls
+    assert long.first_token_t is not None
+    # every prefill chunk tick also advanced the short request's decode
+    assert all(d >= 1 for d in decoded_during_prefill)
+    for _ in range(60):
+        eng.tick()
+    assert len(eng.finished) == 2
+    assert len(long.generated) == 4
+    eng.close()
+
+
+def test_bucketed_prefill_matches_legacy_and_reuses_compiles(small_model, rng):
+    """Mixed prompt lengths: the bucketed engine must produce token-identical
+    greedy output while compiling >=2x fewer prefill programs."""
+    cfg, params = small_model
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 7, 9, 12, 19, 23, 26, 31, 37, 45)]
+    outs, compiles = {}, {}
+    for mode in ("bucketed", "legacy"):
+        eng = ServeEngine(cfg, params, max_batch=3, cache_len=96,
+                          enable_smartconf=False, prefill_mode=mode)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 6))
+        ticks = 0
+        while len(eng.finished) < len(prompts) and ticks < 300:
+            eng.tick()
+            ticks += 1
+        assert len(eng.finished) == len(prompts), mode
+        outs[mode] = {r.req_id: r.generated for r in eng.finished}
+        compiles[mode] = eng.prefill_compiles
+        eng.close()
+    assert outs["bucketed"] == outs["legacy"]
+    assert compiles["legacy"] >= 2 * compiles["bucketed"], compiles
+
+
 def test_kv_pool_accounting(small_model):
     cfg, _ = small_model
     pool = KVBlockPool(cfg, block_tokens=16, max_blocks=4)
@@ -86,6 +140,41 @@ def test_kv_pool_accounting(small_model):
     assert pool.used_blocks == 2
     assert pool.ensure(3, 10)
     assert kv_bytes_per_token(cfg) > 0
+
+
+def test_kv_pool_budget_shrink_with_live_seqs(small_model):
+    """§4.2 temporary inconsistency: shrinking the budget below current
+    occupancy tolerates running sequences but blocks new growth until
+    enough frees bring occupancy back under."""
+    cfg, _ = small_model
+    pool = KVBlockPool(cfg, block_tokens=16, max_blocks=8)
+    assert pool.ensure(1, 48)            # 3 blocks
+    assert pool.ensure(2, 48)            # 3 blocks
+    pool.set_budget(4)                   # below the 6 in use
+    assert pool.used_blocks == 6         # live seqs tolerated
+    assert not pool.ensure(3, 16)        # new growth blocked...
+    assert not pool.ensure(1, 64)        # ...including growth of live seqs
+    assert pool.ensure(2, 40)            # no new blocks needed -> fine
+    pool.free(1)
+    assert pool.used_blocks == 3
+    assert pool.ensure(3, 16)            # back under budget
+    assert pool.used_blocks == 4
+
+
+def test_kv_pool_alloc_failures_and_unknown_free(small_model):
+    cfg, _ = small_model
+    pool = KVBlockPool(cfg, block_tokens=16, max_blocks=2)
+    assert pool.ensure(1, 32)
+    for _ in range(3):
+        assert not pool.ensure(2, 16)
+    assert pool.alloc_failures == 3      # each rejection counted
+    pool.free(99)                        # unknown seq: no-op
+    assert pool.used_blocks == 2
+    pool.free(1)
+    pool.free(1)                         # double free: no-op, no underflow
+    assert pool.used_blocks == 0
+    assert pool.live_seqs == 0
+    assert pool.used_bytes == 0
 
 
 def test_trainer_runs_and_restarts(small_model):
