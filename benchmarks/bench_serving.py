@@ -1,17 +1,24 @@
 """Serving hot-path benchmark: bucketed/chunked prefill vs. per-length
-compile, on a mixed-prompt-length workload.
+compile, and paged vs. dense KV residency, on a mixed-prompt-length workload.
 
-This is the first entry in the serving-perf trajectory (ROADMAP): the
-workload substrate the SmartConf serve controllers are evaluated against.
-Rows report, for each prefill mode:
+This is the serving-perf trajectory entry (ROADMAP): the workload substrate
+the SmartConf serve controllers are evaluated against.  Rows report:
 
   * prefill jit-compile count (the bucketed path compiles one program per
     power-of-two bucket; the legacy path one per distinct prompt length),
-  * decode throughput (tokens/s over all decode ticks),
-  * TTFT p50/p99 across requests.
+  * decode throughput (tokens/s over steady-state decode ticks) for the
+    paged block-table cache vs. the dense per-slot cache,
+  * TTFT p50/p99 across requests,
+  * the ``serve.kv_block_budget`` actuation check: cutting the budget on a
+    paged engine must drop ``hbm_bytes`` (the physical block store shrinks,
+    preempting sequences), while on a dense engine the same cut only moves
+    the logical ledger.
 
-Reduced config on CPU — the *ratios* (compile count, relative tokens/s) are
-the reproducible signal, not absolute microseconds.
+Reduced config on CPU — the *ratios* (compile count, relative tokens/s,
+hbm deltas) are the reproducible signal, not absolute microseconds.
+
+``--smoke`` (or ``run(smoke=True)``) runs a tiny instance of every section
+so CI can keep the benchmark from rotting (see tests/test_paging.py).
 """
 
 from __future__ import annotations
@@ -27,26 +34,32 @@ MAX_NEW = 8
 MAX_BATCH = 4
 CACHE_LEN = 128
 
+SMOKE_N_REQUESTS = 5
+SMOKE_MAX_BATCH = 2
+SMOKE_CACHE_LEN = 64
+SMOKE_DECODE_TICKS = 8
 
-def _workload(vocab: int, seed: int = 7):
+
+def _workload(vocab: int, n_requests: int, seed: int = 7):
     """Mixed lengths: short chat-like, mid, and a long tail."""
     rng = np.random.default_rng(seed)
     lengths = np.concatenate([
-        rng.integers(5, 16, N_REQUESTS // 3),
-        rng.integers(16, 48, N_REQUESTS // 3),
-        rng.integers(48, 100, N_REQUESTS - 2 * (N_REQUESTS // 3)),
-    ])
+        rng.integers(5, 16, n_requests // 3 + 1),
+        rng.integers(16, 40, n_requests // 3 + 1),
+        rng.integers(40, 56, n_requests // 3 + 1),
+    ])[:n_requests]
     rng.shuffle(lengths)
     return [rng.integers(0, vocab, int(n)).astype(np.int32) for n in lengths]
 
 
-def _run_engine(cfg, params, prompts, mode: str):
+def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
+                cache_len: int, max_new: int = MAX_NEW):
     from repro.serve import Request, ServeEngine
 
-    eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
                       enable_smartconf=False, prefill_mode=mode)
     for i, p in enumerate(prompts):
-        eng.submit(Request(i, p, MAX_NEW))
+        eng.submit(Request(i, p, max_new))
     t0 = time.perf_counter()
     ticks = 0
     while len(eng.finished) < len(prompts) and ticks < 4000:
@@ -62,26 +75,31 @@ def _run_engine(cfg, params, prompts, mode: str):
         "prefill_calls": eng.prefill_calls,
         "ttft_p50": ttfts[len(ttfts) // 2],
         "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+        "generated": {r.req_id: list(r.generated) for r in eng.finished},
     }
     eng.close()
     return out
 
 
-def _decode_throughput(cfg, params, mode: str, n_ticks: int = 60):
+def _decode_throughput(cfg, params, kv_mode: str, *, max_batch: int,
+                       cache_len: int, n_ticks: int = 60):
     """Steady-state decode tokens/s at full batch occupancy: all slots
     prefill first (outside the timed region), then pure decode ticks are
-    timed.  The decode step is shared between modes, so this isolates the
-    donation + deferred-sync hot path from scheduling composition."""
+    timed.  kv_mode isolates the paged block-table gather + kernel against
+    the dense per-slot cache on the identical schedule."""
     from repro.serve import Request, ServeEngine
 
-    eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
-                      enable_smartconf=False, prefill_mode=mode)
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
+                      enable_smartconf=False, kv_mode=kv_mode)
     rng = np.random.default_rng(11)
-    for i in range(MAX_BATCH):
+    for i in range(max_batch):
         eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
-                           .astype(np.int32), CACHE_LEN - 16))
-    eng.tick()                              # prefill + warm the decode compile
-    assert len(eng.running) == MAX_BATCH
+                           .astype(np.int32), cache_len - 16))
+    ticks = 0
+    while len(eng.running) < max_batch and ticks < 50:
+        eng.tick()                          # prefill + warm the decode compile
+        ticks += 1
+    assert len(eng.running) == max_batch, f"{kv_mode}: slots did not fill"
     t0 = time.perf_counter()
     tokens = sum(eng.tick()["tokens"] for _ in range(n_ticks))
     tok_s = tokens / (time.perf_counter() - t0)
@@ -89,29 +107,64 @@ def _decode_throughput(cfg, params, mode: str, n_ticks: int = 60):
     return tok_s
 
 
-def run() -> list[str]:
+def _budget_cut(cfg, params, kv_mode: str, *, max_batch: int, cache_len: int):
+    """Fill every slot, then cut ``serve.kv_block_budget`` to one sequence's
+    worth.  Returns (hbm_before, hbm_after, preemptions): paged engines
+    preempt + physically shrink the block store; dense engines only move the
+    logical threshold, so hbm is unchanged."""
+    from repro.serve import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
+                      enable_smartconf=False, kv_mode=kv_mode)
+    rng = np.random.default_rng(13)
+    for i in range(max_batch):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
+                           .astype(np.int32), cache_len // 2))
+    ticks = 0
+    while len(eng.running) < max_batch and ticks < 50:
+        eng.tick()
+        ticks += 1
+    assert len(eng.running) == max_batch, f"{kv_mode}: slots did not fill"
+    hbm0 = eng.hbm_bytes()
+    eng.set_kv_budget(eng.blocks_per_seq)
+    eng.tick()
+    hbm1 = eng.hbm_bytes()
+    preempted = eng.preemptions
+    eng.close()
+    return hbm0, hbm1, preempted
+
+
+def run(smoke: bool = False) -> list[str]:
     import jax
     from repro.configs import get_config
     from repro.configs.base import reduced
     from repro.models import zoo
 
+    n_requests = SMOKE_N_REQUESTS if smoke else N_REQUESTS
+    max_batch = SMOKE_MAX_BATCH if smoke else MAX_BATCH
+    cache_len = SMOKE_CACHE_LEN if smoke else CACHE_LEN
+    max_new = 4 if smoke else MAX_NEW
+    decode_ticks = SMOKE_DECODE_TICKS if smoke else 60
+
     cfg = reduced(get_config("yi-6b"))
     params, _ = zoo.init(cfg, jax.random.key(0))
-    prompts = _workload(cfg.vocab_size)
+    prompts = _workload(cfg.vocab_size, n_requests)
     n_lengths = len({len(p) for p in prompts})
 
     rows = []
-    res = {m: _run_engine(cfg, params, prompts, m)
+    res = {m: _run_engine(cfg, params, prompts, m, max_batch=max_batch,
+                          cache_len=cache_len, max_new=max_new)
            for m in ("legacy", "bucketed")}
+    # the bucketed engine serves from the paged KV cache (kv_mode auto),
+    # the legacy engine from the dense per-slot cache: identical tokens is
+    # the end-to-end paged/dense parity check
+    assert res["legacy"]["generated"] == res["bucketed"]["generated"], \
+        "paged (bucketed) and dense (legacy) engines disagree on tokens"
     for mode, r in res.items():
         rows.append(fmt_row(
             f"serving_prefill_{mode}", r["wall_s"] / r["ticks"] * 1e6,
             f"compiles={r['prefill_compiles']} calls={r['prefill_calls']} "
             f"distinct_lengths={n_lengths}"))
-        tok_s = _decode_throughput(cfg, params, mode)
-        rows.append(fmt_row(
-            f"serving_decode_{mode}", 1e6 / max(tok_s, 1e-9),
-            f"steady_state_tokens_per_s={tok_s:.1f}"))
         rows.append(fmt_row(
             f"serving_ttft_{mode}", r["ttft_p50"] * 1e6,
             f"p50_ms={r['ttft_p50']*1e3:.1f} p99_ms={r['ttft_p99']*1e3:.1f}"))
@@ -120,10 +173,31 @@ def run() -> list[str]:
     rows.append(fmt_row(
         "serving_compile_reduction", 0.0,
         f"legacy/bucketed={ratio:.1f}x (goal >=2x)"))
+
+    tok_s = {m: _decode_throughput(cfg, params, m, max_batch=max_batch,
+                                   cache_len=cache_len, n_ticks=decode_ticks)
+             for m in ("dense", "paged")}
+    for m, t in tok_s.items():
+        rows.append(fmt_row(
+            f"serving_decode_{m}", 1e6 / max(t, 1e-9),
+            f"steady_state_tokens_per_s={t:.1f}"))
+    rows.append(fmt_row(
+        "serving_decode_paged_vs_dense", 0.0,
+        f"paged/dense={tok_s['paged'] / max(tok_s['dense'], 1e-9):.2f}x "
+        "(goal >=0.9x)"))
+
+    for m in ("dense", "paged"):
+        hbm0, hbm1, pre = _budget_cut(cfg, params, m, max_batch=max_batch,
+                                      cache_len=cache_len)
+        rows.append(fmt_row(
+            f"serving_kv_budget_cut_{m}", 0.0,
+            f"hbm_before={hbm0} hbm_after={hbm1} freed={hbm0 - hbm1} "
+            f"preempted={pre}"))
     return rows
 
 
 if __name__ == "__main__":
+    import sys
     print("name,us_per_call,derived")
-    for row in run():
+    for row in run(smoke="--smoke" in sys.argv):
         print(row)

@@ -1,5 +1,6 @@
-from .decode_attention import decode_attention
+from .decode_attention import DEFAULT_BLOCK_KV, decode_attention, padded_cache_len
 from .ops import decode_attention_op
 from .ref import decode_attention_ref
 
-__all__ = ["decode_attention", "decode_attention_op", "decode_attention_ref"]
+__all__ = ["DEFAULT_BLOCK_KV", "decode_attention", "decode_attention_op",
+           "decode_attention_ref", "padded_cache_len"]

@@ -26,6 +26,18 @@ DEFAULT_BLOCK_KV = 512
 NEG_INF = -1e30
 
 
+def padded_cache_len(n: int, block_kv: int = DEFAULT_BLOCK_KV) -> int:
+    """Smallest cache length >= n that :func:`decode_attention` never pads.
+
+    The kernel tiles the KV axis by ``min(block_kv, S)``; any S above
+    ``block_kv`` that is not a multiple of it forces a ``jnp.pad`` of K/V
+    (a full cache copy) on *every* decode call.  Sizing the cache with this
+    helper at engine init moves that cost to allocation time, once."""
+    if n <= block_kv:
+        return n
+    return -(-n // block_kv) * block_kv
+
+
 def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
             m_scr, l_scr, acc_scr, *, window: int, block_kv: int):
     ki = pl.program_id(2)

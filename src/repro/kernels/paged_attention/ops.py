@@ -1,0 +1,28 @@
+"""Jitted wrapper with backend dispatch (pallas on TPU, XLA elsewhere).
+
+``REPRO_PAGED_IMPL`` overrides the automatic choice (``xla`` |
+``pallas`` | ``pallas_interpret``); ``pallas_interpret`` lets CPU CI run the
+real kernel end-to-end through the serve engine.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .paged_attention import paged_decode_attention
+from .ref import paged_decode_attention_ref
+
+
+def paged_decode_attention_op(q, k_store, v_store, block_tables, q_pos, *,
+                              window: int = 0, force: str | None = None):
+    mode = force or os.environ.get("REPRO_PAGED_IMPL")
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        return paged_decode_attention_ref(q, k_store, v_store, block_tables,
+                                          q_pos, window=window)
+    return paged_decode_attention(q, k_store, v_store, block_tables, q_pos,
+                                  window=window,
+                                  interpret=(mode == "pallas_interpret"))

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers the per-sequence logical KV view through the block table and defers
+to the dense decode-attention oracle, so the paged and dense oracles can
+never drift apart.  Logical position ``p`` of row ``b`` lives in physical
+block ``block_tables[b, p // T]`` at offset ``p % T``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def paged_gather(k_store, v_store, block_tables):
+    """Materialize each row's logical KV view from the global block store.
+
+    k_store/v_store: [N, Kv, T, D]; block_tables: [B, M] int32 (-1 = hole).
+    Returns (k [B, Kv, M*T, D], v [B, Kv, M*T, D], k_pos [B, M*T]) where
+    ``k_pos`` carries the logical position of each view slot, -1 for slots
+    behind a -1 table entry (so downstream masking drops them).
+    """
+    n, kv_heads, t, d = k_store.shape
+    b, m = block_tables.shape
+    idx = jnp.clip(block_tables, 0, n - 1)               # [B, M]
+    k = k_store[idx].transpose(0, 2, 1, 3, 4).reshape(b, kv_heads, m * t, d)
+    v = v_store[idx].transpose(0, 2, 1, 3, 4).reshape(b, kv_heads, m * t, d)
+    pos = jnp.arange(m * t, dtype=jnp.int32)[None, :]     # [1, M*T]
+    ok = jnp.repeat(block_tables >= 0, t, axis=1)         # [B, M*T]
+    k_pos = jnp.where(ok, pos, -1)
+    return k, v, k_pos
+
+
+def paged_decode_attention_ref(q, k_store, v_store, block_tables, q_pos, *,
+                               window: int = 0):
+    """q: [B,H,D]; k_store/v_store: [N,Kv,T,D]; block_tables: [B,M] int32;
+    q_pos: [B] -> [B,H,D].  Keys at logical positions > q_pos (or behind -1
+    table entries, or outside the sliding window) are masked."""
+    k, v, k_pos = paged_gather(k_store, v_store, block_tables)
+    return decode_attention_ref(q, k, v, k_pos, q_pos, window=window)

@@ -31,6 +31,11 @@ def main() -> None:
                     help="bucketed = padded power-of-two chunked prefill "
                          "(compile-count O(log len)); legacy = exact "
                          "one-shot per prompt length")
+    ap.add_argument("--kv-mode", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="paged = block-table KV cache + paged decode "
+                         "kernel (attention-only archs); dense = per-slot "
+                         "[max_batch, cache_len] cache")
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
@@ -43,7 +48,7 @@ def main() -> None:
     budget = int(weights + args.budget_headroom_mb * 1e6)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, hbm_budget_bytes=budget,
-                      prefill_mode=args.prefill_mode)
+                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -53,11 +58,14 @@ def main() -> None:
         eng.tick()
         ticks += 1
     mode = "bucketed" if eng.fused_prefill else "legacy"
+    kv = "paged" if eng.paged else "dense"
     print(f"{cfg.name}: {len(eng.finished)}/{args.requests} done in {ticks} "
           f"ticks; HBM violations {eng.accountant.violations}; "
           f"peak {eng.accountant.peak_bytes/1e6:.1f}/{budget/1e6:.1f} MB; "
           f"TTFT {eng.ttft.mean()*1e3:.0f}ms; prefill[{mode}] "
-          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles")
+          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles; "
+          f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
+          f"{eng.preemptions} preemptions")
     eng.close()
 
 

@@ -91,6 +91,54 @@ def block_cache_init(cfg, kind: str, batch: int, seq_len: int):
     raise ValueError(kind)
 
 
+def paged_cache_init(cfg, kind: str, num_blocks: int, block_tokens: int):
+    """Physical block store for one attention layer: ``[N, Kv, T, D]``
+    (kernels/paged_attention ABI).  There is no ``pos`` plane — positions
+    are implied by block-table order — and no per-slot batch axis: all
+    sequences share the store through their tables."""
+    base, _ = split_kind(kind)
+    if base not in ATTN_KINDS:
+        raise ValueError(f"paged KV requires attention blocks, got {kind!r}")
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_blocks, cfg.num_kv_heads, block_tokens, hd),
+                       cfg.dtype),
+        "v": jnp.zeros((num_blocks, cfg.num_kv_heads, block_tokens, hd),
+                       cfg.dtype),
+    }
+
+
+def _paged_scatter(cache, k, v, pos, valid, block_tables):
+    """Write per-token K/V into the block store through the table.
+
+    k, v: [B, C, Kv, D]; pos: [B, C] absolute logical positions; valid:
+    [B, C] bool (False rows/tokens are dropped).  Distinct logical positions
+    map to distinct (block, offset) pairs, so the scatter never collides."""
+    n, _, t, _ = cache["k"].shape
+    m = block_tables.shape[1]
+    blk = jnp.clip(pos // t, 0, m - 1)
+    entry = jnp.take_along_axis(block_tables, blk, axis=1)       # [B, C]
+    phys = jnp.where(valid & (entry >= 0), entry, n)             # n => drop
+    off = (pos % t).astype(jnp.int32)
+    return {
+        "k": cache["k"].at[phys, :, off].set(
+            k.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[phys, :, off].set(
+            v.astype(cache["v"].dtype), mode="drop"),
+    }
+
+
+def _paged_view(cache, block_tables):
+    """Materialize the logical [B, M*T, Kv, D] K/V view plus its position
+    plane (-1 behind unallocated table entries) — the XLA twin of the paged
+    Pallas kernel's scalar-prefetch gather, used by chunked prefill where
+    queries span many tokens.  Delegates to the kernel family's
+    ``paged_gather`` so the block-table ABI has one decoder."""
+    from repro.kernels.paged_attention import paged_gather
+    k, v, k_pos = paged_gather(cache["k"], cache["v"], block_tables)
+    return jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2), k_pos
+
+
 def _theta(cfg, base: str) -> float:
     if base == "global" and cfg.rope_theta_global:
         return cfg.rope_theta_global
@@ -182,10 +230,15 @@ def _write_cache(cache, k, v, positions):
 
 
 def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
-                      pos: jax.Array, valid: jax.Array, cache: dict):
+                      pos: jax.Array, valid: jax.Array, cache: dict,
+                      block_tables: jax.Array | None = None):
     """x: [B,C,d] padded prompt chunk; pos: [B,C] absolute positions
     (row-wise contiguous, left-aligned); valid: [B,C] bool marks real
     tokens (False = pad or inactive slot); cache: attention KV cache.
+    With ``block_tables`` ([B,M] int32) the cache is a paged block store:
+    chunk K/V are scattered into physical blocks first, then queries attend
+    to the table-gathered logical view (write-then-gather is exact because
+    rows prefill front-to-back, so every position <= q_pos is written).
 
     Queries attend to (prior cache entries ++ in-chunk keys) under one
     softmax, so a chunk mid-prompt sees its full history exactly.  Only the
@@ -207,6 +260,17 @@ def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
                     pos, theta)
     v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
 
+    window = cfg.window if base in ("swa", "local") else 0
+    if block_tables is not None:
+        cache = _paged_scatter(cache, k, v, pos, valid, block_tables)
+        k_eff, v_eff, kpos_eff = _paged_view(cache, block_tables)
+        o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff,
+                                   q_pos=pos, window=window)
+        x = x + layers.attn_output(params["attn"], o)
+        h2 = apply_norm(cfg.norm, params["ln2"], x)
+        x = x + layers.mlp(params["mlp"], h2, cfg.mlp)
+        return x, cache, aux
+
     kpos_chunk = jnp.where(valid, pos, -1).astype(jnp.int32)
     # cache entries at/after the chunk start are stale (a freed slot's
     # previous occupant); this row's true history is strictly before it
@@ -214,7 +278,6 @@ def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
     k_eff = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
     v_eff = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
     kpos_eff = jnp.concatenate([kpos_cache, kpos_chunk], axis=1)
-    window = cfg.window if base in ("swa", "local") else 0
     o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff, q_pos=pos,
                                window=window)
     x = x + layers.attn_output(params["attn"], o)
@@ -255,10 +318,14 @@ def _keep_active(active, new_state, old_state):
 
 
 def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
-                     pos: jax.Array, cache: dict, active=None):
+                     pos: jax.Array, cache: dict, active=None,
+                     block_tables: jax.Array | None = None):
     """x: [B,1,d]; pos: [B] absolute position of this token.  ``active``
     ([B] bool, optional) masks cache/state writes for slots that are not
-    decoding this tick (free, or mid chunked-prefill)."""
+    decoding this tick (free, or mid chunked-prefill).  ``block_tables``
+    ([B,M] int32, attention kinds only) switches the KV cache to the paged
+    block store: this token's K/V is scattered into its physical block and
+    attention runs through the paged decode kernel."""
     base, is_moe = split_kind(kind)
     aux = jnp.zeros((), jnp.float32)
 
@@ -291,20 +358,30 @@ def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
         k_t = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
                           pos2d, theta)
         v_t = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
-        n = cache["k"].shape[1]
-        slot = (pos % n).astype(jnp.int32)                    # ring or direct
-        if active is not None:
-            slot = jnp.where(active, slot, n)                 # n => dropped
-        bidx = jnp.arange(x.shape[0])
-        kc = cache["k"].at[bidx, slot].set(k_t[:, 0], mode="drop")
-        vc = cache["v"].at[bidx, slot].set(v_t[:, 0], mode="drop")
-        pc = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32),
-                                             mode="drop")
         window = cfg.window if base in ("swa", "local") else 0
-        o = layers.decode_attention(q, kc, vc, k_pos=pc, q_pos=pos,
-                                    window=window)
-        x = x + layers.attn_output(params["attn"], o)
-        new_cache = {"k": kc, "v": vc, "pos": pc}
+        if block_tables is not None:
+            ok = jnp.ones(pos.shape, bool) if active is None else active
+            new_cache = _paged_scatter(cache, k_t, v_t, pos[:, None],
+                                       ok[:, None], block_tables)
+            from repro.kernels.paged_attention import paged_decode_attention_op
+            o = paged_decode_attention_op(q[:, 0], new_cache["k"],
+                                          new_cache["v"], block_tables, pos,
+                                          window=window)
+            x = x + layers.attn_output(params["attn"], o[:, None])
+        else:
+            n = cache["k"].shape[1]
+            slot = (pos % n).astype(jnp.int32)                # ring or direct
+            if active is not None:
+                slot = jnp.where(active, slot, n)             # n => dropped
+            bidx = jnp.arange(x.shape[0])
+            kc = cache["k"].at[bidx, slot].set(k_t[:, 0], mode="drop")
+            vc = cache["v"].at[bidx, slot].set(v_t[:, 0], mode="drop")
+            pc = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32),
+                                                 mode="drop")
+            o = layers.decode_attention(q, kc, vc, k_pos=pc, q_pos=pos,
+                                        window=window)
+            x = x + layers.attn_output(params["attn"], o)
+            new_cache = {"k": kc, "v": vc, "pos": pc}
 
     h2 = apply_norm(cfg.norm, params["ln2"], x)
     if is_moe:

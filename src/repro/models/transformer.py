@@ -392,15 +392,67 @@ def supports_chunked_prefill(cfg) -> bool:
     return all(B.split_kind(k)[0] in B.ATTN_KINDS for k in kinds)
 
 
-def prefill_chunk(cfg, params, caches, tokens, start, lengths):
+def supports_paged_kv(cfg) -> bool:
+    """Paged KV (block-table cache + paged decode kernel) is selected
+    per-arch like ``supports_chunked_prefill`` and currently shares its
+    condition: every block must be a dense-attention kind, and prefill must
+    go through the chunked path (the one-shot legacy prefill builds a dense
+    per-slot cache that has no paged equivalent).  Recurrent blocks carry
+    O(1) state — nothing to page."""
+    return supports_chunked_prefill(cfg)
+
+
+def init_paged_cache(cfg, num_blocks: int, block_tokens: int):
+    """Per-layer physical block stores ``[num_blocks, Kv, T, D]`` replacing
+    the dense per-slot cache (structure mirrors :func:`init_cache`)."""
+    if not supports_paged_kv(cfg):
+        raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
+                         "does not support paged KV")
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    caches = {}
+    if prefix:
+        caches["prefix"] = [B.paged_cache_init(cfg, k, num_blocks, block_tokens)
+                            for k in prefix]
+    if n_groups:
+        group = [B.paged_cache_init(cfg, k, num_blocks, block_tokens)
+                 for k in pattern]
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), group)
+    if rem:
+        caches["rem"] = [B.paged_cache_init(cfg, k, num_blocks, block_tokens)
+                         for k in rem]
+    return caches
+
+
+def map_paged_caches(caches, fn):
+    """Apply ``fn(array, block_axis)`` to every store plane of a paged cache
+    tree (block axis 0 for prefix/rem layers, 1 for the group-stacked ones).
+    Used by the engine to physically resize the block store when
+    ``serve.kv_block_budget`` moves."""
+    out = dict(caches)
+    if "prefix" in caches:
+        out["prefix"] = [{n: fn(a, 0) for n, a in c.items()}
+                         for c in caches["prefix"]]
+    if "groups" in caches:
+        out["groups"] = [jax.tree.map(lambda a: fn(a, 1), c)
+                         for c in caches["groups"]]
+    if "rem" in caches:
+        out["rem"] = [{n: fn(a, 0) for n, a in c.items()}
+                      for c in caches["rem"]]
+    return out
+
+
+def prefill_chunk(cfg, params, caches, tokens, start, lengths,
+                  block_tables=None):
     """Advance prefill by one padded chunk per batch row, in place.
 
     tokens: [B,C] int32 (row-wise left-aligned, zero-padded); start: [B]
     absolute position of each row's first chunk token; lengths: [B] valid
     tokens this chunk (0 = inactive row: no cache writes, garbage logits).
-    Returns (next-token logits [B,V] at each row's last valid position,
-    caches).  Chunks attend to prior chunks through the cache, so calling
-    this repeatedly over a long prompt is exact chunked prefill."""
+    ``block_tables`` ([B,M] int32, optional) switches the caches to paged
+    block stores.  Returns (next-token logits [B,V] at each row's last valid
+    position, caches).  Chunks attend to prior chunks through the cache, so
+    calling this repeatedly over a long prompt is exact chunked prefill."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
                          "does not support chunked prefill")
@@ -412,7 +464,8 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths):
 
     for j, kind in enumerate(prefix):
         x, caches["prefix"][j], _ = B.block_apply_chunk(
-            cfg, kind, params["prefix"][j], x, pos, valid, caches["prefix"][j])
+            cfg, kind, params["prefix"][j], x, pos, valid,
+            caches["prefix"][j], block_tables=block_tables)
 
     if n_groups:
         def group_body(x, xs):
@@ -420,7 +473,8 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths):
             new_c = []
             for j, kind in enumerate(pattern):
                 x, cj, _ = B.block_apply_chunk(cfg, kind, gp[j], x, pos,
-                                               valid, gc[j])
+                                               valid, gc[j],
+                                               block_tables=block_tables)
                 new_c.append(cj)
             return x, new_c
 
@@ -430,7 +484,8 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths):
 
     for j, kind in enumerate(rem):
         x, caches["rem"][j], _ = B.block_apply_chunk(
-            cfg, kind, params["rem"][j], x, pos, valid, caches["rem"][j])
+            cfg, kind, params["rem"][j], x, pos, valid, caches["rem"][j],
+            block_tables=block_tables)
 
     x = apply_norm(cfg.norm, params["ln_f"], x)
     last = jnp.clip(lengths - 1, 0, c - 1)
@@ -439,9 +494,12 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths):
     return logits, caches
 
 
-def decode_step(cfg, params, caches, token, pos, active=None):
+def decode_step(cfg, params, caches, token, pos, active=None,
+                block_tables=None):
     """token: [B] int32; pos: [B] absolute position.  ``active`` ([B] bool,
-    optional) masks cache/state writes for non-decoding slots.  Returns
+    optional) masks cache/state writes for non-decoding slots.
+    ``block_tables`` ([B,M] int32, optional) routes attention caches through
+    the paged block store + paged decode kernel.  Returns
     (logits [B,V], caches')."""
     prefix, pattern, n_groups, rem = _plan(cfg)
     x = params["embed"][token][:, None, :]                # [B,1,d]
@@ -472,7 +530,7 @@ def decode_step(cfg, params, caches, token, pos, active=None):
     for j, kind in enumerate(prefix):
         x, caches["prefix"][j], _ = B.block_apply_step(
             cfg, kind, params["prefix"][j], x, pos, caches["prefix"][j],
-            active=active)
+            active=active, block_tables=block_tables)
         x = maybe_cross(x, layer_idx)
         layer_idx += 1
 
@@ -483,7 +541,8 @@ def decode_step(cfg, params, caches, token, pos, active=None):
             new_c = []
             for j, kind in enumerate(pattern):
                 x, cj, _ = B.block_apply_step(cfg, kind, gp[j], x, pos, gc[j],
-                                              active=active)
+                                              active=active,
+                                              block_tables=block_tables)
                 if enc_out is not None:
                     x = maybe_cross(x, li + j)
                 new_c.append(cj)
@@ -497,7 +556,7 @@ def decode_step(cfg, params, caches, token, pos, active=None):
     for j, kind in enumerate(rem):
         x, caches["rem"][j], _ = B.block_apply_step(
             cfg, kind, params["rem"][j], x, pos, caches["rem"][j],
-            active=active)
+            active=active, block_tables=block_tables)
         x = maybe_cross(x, layer_idx)
         layer_idx += 1
 

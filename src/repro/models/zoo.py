@@ -10,7 +10,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from . import transformer
 
 __all__ = ["init", "loss_fn", "forward", "prefill", "prefill_chunk",
-           "supports_chunked_prefill", "decode_step", "init_cache",
+           "supports_chunked_prefill", "supports_paged_kv", "decode_step",
+           "init_cache", "init_paged_cache", "map_paged_caches",
            "make_batch", "input_specs"]
 
 init = transformer.init
@@ -19,8 +20,11 @@ forward = transformer.forward
 prefill = transformer.prefill
 prefill_chunk = transformer.prefill_chunk
 supports_chunked_prefill = transformer.supports_chunked_prefill
+supports_paged_kv = transformer.supports_paged_kv
 decode_step = transformer.decode_step
 init_cache = transformer.init_cache
+init_paged_cache = transformer.init_paged_cache
+map_paged_caches = transformer.map_paged_caches
 
 
 def token_seq_len(cfg: ArchConfig, seq_len: int) -> int:

@@ -1,4 +1,6 @@
 from .engine import Request, ServeEngine
 from .kv_cache import KVBlockPool, kv_bytes_per_token
+from .paging import PagedKVAllocator
 
-__all__ = ["Request", "ServeEngine", "KVBlockPool", "kv_bytes_per_token"]
+__all__ = ["Request", "ServeEngine", "KVBlockPool", "PagedKVAllocator",
+           "kv_bytes_per_token"]

@@ -37,6 +37,20 @@ Hot-path design (the serving-perf tentpole):
     (token ring in ``_gen_buf``); the host reads a sequence back exactly
     once, at its completion boundary.
 
+KV residency (the paged-KV tentpole):
+  * **Paged KV cache** — for attention-only archs the per-slot dense
+    ``[max_batch, cache_len]`` cache is replaced by per-layer physical
+    block stores ``[capacity, Kv, T, D]`` addressed through per-sequence
+    block tables (``serve/paging.py`` free-list allocator +
+    ``kernels/paged_attention`` Pallas decode kernel).  Admission reserves
+    table entries only — no cache-tree copy; ``serve.kv_block_budget``
+    bounds the *physical* store, so budget cuts below occupancy preempt the
+    lowest-priority sequence back to the queue (recompute on re-admission)
+    and shrink the store arrays, actually releasing HBM rather than only
+    moving the ledger.  Archs with recurrent/MoE/modality blocks keep the
+    dense path (``kv_mode="auto"``, selected like
+    ``supports_chunked_prefill``).
+
 Models whose blocks cannot be position-masked (recurrent, MoE routing,
 modality prefixes) keep the exact one-shot prefill path automatically
 (``prefill_mode="auto"``).
@@ -58,8 +72,10 @@ from repro.core import (ControllerModel, GoalSpec, HBMAccountant,
                         LatencySensor, SmartConfIndirect, SmartConf,
                         ThroughputSensor)
 from repro.core.smartconf import ConfRegistry
+from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
 from .kv_cache import KVBlockPool, kv_bytes_per_token, QUEUE_TOKEN_BYTES
+from .paging import PagedKVAllocator
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -86,6 +102,8 @@ class Request:
     prefilled: int = 0          # prompt tokens already prefilled (chunking)
     prefill_chunks: int = 0     # chunk calls this request's prefill spanned
     gen_count: int = 0          # tokens generated (device-resident until done)
+    admit_seq: int = 0          # scheduling order; highest = first preempted
+    preempted: int = 0          # times this request was kicked back to queue
 
 
 class ServeEngine:
@@ -94,12 +112,15 @@ class ServeEngine:
                  block_tokens: int = 16, enable_smartconf: bool = True,
                  latency_goal_s: float | None = None,
                  registry: ConfRegistry | None = None,
-                 prefill_mode: str = "auto",
+                 prefill_mode: str = "auto", kv_mode: str = "auto",
                  clock: Callable[[], float] = time.monotonic) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
-        self.cache_len = cache_len
+        # dense decode tiles the KV axis by block_kv: a cache_len that is
+        # not a tile multiple would re-pad K/V with jnp.pad on every decode
+        # call, so round the allocation up once here instead
+        self.cache_len = cache_len = padded_cache_len(cache_len)
         self.clock = clock
 
         if prefill_mode not in ("auto", "bucketed", "legacy"):
@@ -111,13 +132,38 @@ class ServeEngine:
         self.fused_prefill = (prefill_mode == "bucketed" or (
             prefill_mode == "auto" and zoo.supports_chunked_prefill(cfg)))
 
+        if kv_mode not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if kv_mode == "paged" and not (zoo.supports_paged_kv(cfg)
+                                       and self.fused_prefill):
+            raise ValueError(
+                f"{cfg.name}: paged KV requires an attention-only block "
+                "pattern and chunked prefill (prefill_mode != 'legacy')")
+        self.paged = kv_mode == "paged" or (
+            kv_mode == "auto" and self.fused_prefill
+            and zoo.supports_paged_kv(cfg))
+
         self.accountant = HBMAccountant(budget_bytes=hbm_budget_bytes)
         weight_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
                            for x in jax.tree.leaves(params))
         self.accountant.set("weights", int(weight_bytes))
 
-        self.pool = KVBlockPool(cfg, block_tokens=block_tokens,
-                                max_blocks=2**30, accountant=self.accountant)
+        self.blocks_per_seq = -(-cache_len // block_tokens)
+        if self.paged:
+            # under an HBM goal the store starts at one sequence's worth and
+            # grows on demand inside the accountant's headroom, so the ledger
+            # (= physical store bytes) never front-runs the budget
+            full = max_batch * self.blocks_per_seq
+            tight = enable_smartconf and hbm_budget_bytes
+            self.pool = PagedKVAllocator(
+                cfg, block_tokens=block_tokens,
+                max_blocks_per_seq=self.blocks_per_seq,
+                capacity_blocks=self.blocks_per_seq if tight else full,
+                budget_blocks=full, accountant=self.accountant)
+        else:
+            self.pool = KVBlockPool(cfg, block_tokens=block_tokens,
+                                    max_blocks=2**30,
+                                    accountant=self.accountant)
         self.registry = registry or ConfRegistry()
 
         # engine state
@@ -128,27 +174,40 @@ class ServeEngine:
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.rejected = 0
+        self.preemptions = 0
+        self._admit_counter = 0
         self._free_slots = collections.deque(range(max_batch))
         self.prefill_calls = 0
         self._prefill_shapes: set[int] = set()
 
         # device-resident hot state (one fused batch across slots); the
         # host only keeps positions/counters, never token values
-        self.caches = zoo.init_cache(cfg, max_batch, cache_len)
+        if self.paged:
+            self.caches = zoo.init_paged_cache(cfg, self.pool.capacity,
+                                               block_tokens)
+            self._bt_np = np.full((max_batch, self.blocks_per_seq), -1,
+                                  np.int32)
+            self._bt_dev = jnp.asarray(self._bt_np)
+            self._bt_dirty = False
+        else:
+            self.caches = zoo.init_cache(cfg, max_batch, cache_len)
         self.slot_pos = np.full((max_batch,), -1, np.int64)
         self._slot_tok = jnp.zeros((max_batch,), jnp.int32)
         self._gen_buf = jnp.zeros((max_batch, cache_len), jnp.int32)
 
-        def decode_fn(p, c, tok, pos, active, gbuf, gidx):
-            logits, c = zoo.decode_step(cfg, p, c, tok, pos, active=active)
+        def decode_fn(p, c, tok, pos, active, gbuf, gidx, bt):
+            logits, c = zoo.decode_step(cfg, p, c, tok, pos, active=active,
+                                        block_tables=bt)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             tok = jnp.where(active, nxt, tok)
             gbuf = gbuf.at[jnp.arange(tok.shape[0]), gidx].set(
                 nxt, mode="drop")
             return tok, c, gbuf
 
-        def prefill_chunk_fn(p, c, tokens, start, lengths, done, tok, gbuf):
-            logits, c = zoo.prefill_chunk(cfg, p, c, tokens, start, lengths)
+        def prefill_chunk_fn(p, c, tokens, start, lengths, done, tok, gbuf,
+                             bt):
+            logits, c = zoo.prefill_chunk(cfg, p, c, tokens, start, lengths,
+                                          block_tables=bt)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             tok = jnp.where(done, first, tok)
             slot0 = jnp.where(done, 0, gbuf.shape[1])
@@ -265,6 +324,14 @@ class ServeEngine:
             "running": len(self.running) + len(self.prefilling),
             "finished": len(self.finished), "hbm": self.hbm_bytes(),
             "tokens": n_tokens,
+            # pool-pressure sensors (budget-vs-occupancy, bench_serving)
+            "kv_used_blocks": self.pool.used_blocks,
+            "kv_budget_blocks": self.pool.max_blocks,
+            "kv_capacity_blocks": getattr(self.pool, "capacity",
+                                          self.pool.max_blocks),
+            "kv_over_budget": self.pool.over_budget,
+            "kv_frag_tokens": self.pool.frag_tokens,
+            "preemptions": self.preemptions,
         }
 
     def run(self, ticks: int) -> list[dict]:
@@ -279,6 +346,9 @@ class ServeEngine:
         self.max_queue_tokens = max(0, int(self.sc_queue.get_conf()))
         self.sc_kv.set_perf(hbm, self.pool.used_blocks)
         self.pool.set_budget(max(1, int(self.sc_kv.get_conf())))
+        if self.paged and self.pool.over_budget:
+            # the budget bit below occupancy: make the cut physical
+            self._enforce_kv_budget()
         if self.sc_chunk is not None:
             self.sc_chunk.set_perf(self.decode_latency.p99())
             self.prefill_chunk = max(1, int(self.sc_chunk.get_conf()))
@@ -297,17 +367,109 @@ class ServeEngine:
         while self.queued and self._free_slots:
             req = self.queued[0]
             total = len(req.prompt) + req.max_new_tokens
-            if not self.pool.ensure(req.req_id, min(total, self.cache_len)):
+            need = min(total, self.cache_len)
+            if self.paged and (self.pool.free_blocks
+                               < -(-need // self.pool.block_tokens)):
+                # store smaller than demand (start-small under an HBM goal,
+                # or shrunk by an earlier cut): grow it first so a free-list
+                # miss is never miscounted as an allocation failure
+                self._grow_store_for(need)
+            if not self.pool.ensure(req.req_id, need):
                 break  # KV budget exhausted; stay queued
             self.queued.popleft()
             self.queued_tokens -= len(req.prompt)
             self.accountant.credit("queue", req.prompt_bytes)
             req.slot = self._free_slots.popleft()
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            if self.paged:
+                self._bt_np[req.slot] = self.pool.table_row(req.req_id)
+                self._bt_dirty = True
             if self.fused_prefill:
                 self.prefilling[req.slot] = req
             else:
                 self._do_prefill_legacy(req)
                 self.running[req.slot] = req
+
+    # --------------------------------------------- paged KV: physical budget
+    def _bt(self) -> jnp.ndarray:
+        """Device block-table operand, refreshed lazily after table edits."""
+        if self._bt_dirty:
+            self._bt_dev = jnp.asarray(self._bt_np)
+            self._bt_dirty = False
+        return self._bt_dev
+
+    def set_kv_budget(self, blocks: int) -> None:
+        """Manual ``serve.kv_block_budget`` actuation (benchmarks / ops):
+        preempts past occupancy and physically resizes the block store."""
+        self.pool.set_budget(blocks)
+        if self.paged:
+            self._enforce_kv_budget()
+
+    def _enforce_kv_budget(self) -> None:
+        while self.pool.over_budget and (self.running or self.prefilling):
+            self._preempt_lowest_priority()
+        bps = self.blocks_per_seq
+        target = min(-(-max(1, self.pool.max_blocks) // bps) * bps,
+                     self.max_batch * bps)
+        target = max(target, bps, self.pool.used_blocks)
+        if target < self.pool.capacity:
+            keep = jnp.asarray(self.pool.compact(target))
+            self.caches = zoo.map_paged_caches(
+                self.caches, lambda a, ax: jnp.take(a, keep, axis=ax))
+            for reqs in (self.prefilling, self.running):
+                for slot, req in reqs.items():
+                    self._bt_np[slot] = self.pool.table_row(req.req_id)
+            self._bt_dirty = True
+
+    def _grow_store_for(self, tokens: int) -> bool:
+        need = -(-tokens // self.pool.block_tokens)
+        full = self.max_batch * self.blocks_per_seq
+        if (self.pool.used_blocks + need > self.pool.max_blocks
+                or need > self.blocks_per_seq):
+            return False   # genuinely over budget, not just store-limited
+        bps = self.blocks_per_seq
+        target = min(-(-(self.pool.used_blocks + need) // bps) * bps, full)
+        if target <= self.pool.capacity:
+            return False   # store large enough; ensure failed on budget
+        head = self.accountant.headroom()
+        if head is not None and (
+                (target - self.pool.capacity) * self.pool.block_bytes > head):
+            return False   # growing the store would blow the hard HBM goal
+        added = self.pool.grow(target)
+
+        def pad(a, ax):
+            shape = list(a.shape)
+            shape[ax] = added
+            return jnp.concatenate([a, jnp.zeros(shape, a.dtype)], axis=ax)
+
+        self.caches = zoo.map_paged_caches(self.caches, pad)
+        return True
+
+    def _preempt_lowest_priority(self) -> None:
+        """Kick the most recently scheduled sequence back to the queue
+        (recompute-on-readmission, paper §4.2: the cut is enforced by
+        temporarily undoing the newest work, never by corrupting state)."""
+        cands = list(self.prefilling.items()) + list(self.running.items())
+        if not cands:
+            return
+        slot, req = max(cands, key=lambda sr: sr[1].admit_seq)
+        self.prefilling.pop(slot, None)
+        self.running.pop(slot, None)
+        self.pool.free(req.req_id)
+        self._free_slots.append(slot)
+        self.slot_pos[slot] = -1
+        self._bt_np[slot] = -1
+        self._bt_dirty = True
+        req.slot = None
+        req.prefilled = 0
+        req.gen_count = 0
+        req.generated = []
+        req.preempted += 1
+        self.queued.appendleft(req)
+        self.queued_tokens += len(req.prompt)
+        self.accountant.charge("queue", req.prompt_bytes)
+        self.preemptions += 1
 
     # ----------------------------------------------- bucketed chunked prefill
     def _prefill_tick(self) -> None:
@@ -332,7 +494,8 @@ class ServeEngine:
         self.caches, self._slot_tok, self._gen_buf = self._prefill_chunk(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(start), jnp.asarray(lengths), jnp.asarray(done),
-            self._slot_tok, self._gen_buf)
+            self._slot_tok, self._gen_buf,
+            self._bt() if self.paged else None)
         self.prefill_calls += 1
         self._prefill_shapes.add(width)
         if done.any():
@@ -346,8 +509,11 @@ class ServeEngine:
             req.prefill_chunks += 1
             if done[slot]:
                 req.gen_count = 1            # first token is on device
-                req.first_token_t = now
-                self.ttft.record(now - req.submitted_t)
+                if req.first_token_t is None:
+                    # preempted requests keep their original TTFT: one
+                    # sample per request, stamped at first compute response
+                    req.first_token_t = now
+                    self.ttft.record(now - req.submitted_t)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
 
@@ -355,6 +521,7 @@ class ServeEngine:
     def _do_prefill_legacy(self, req: Request) -> None:
         """Exact whole-prompt prefill for families the padded path can't
         serve (recurrent state, MoE routing, modality prefixes)."""
+        assert not self.paged, "legacy prefill has no paged-cache merge path"
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
         batch = {"tokens": prompt}
         if self.cfg.frontend == "vision":
@@ -391,7 +558,8 @@ class ServeEngine:
         pos = jnp.asarray(np.maximum(self.slot_pos, 0).astype(np.int32))
         self._slot_tok, self.caches, self._gen_buf = self._decode(
             self.params, self.caches, self._slot_tok, pos,
-            jnp.asarray(active), self._gen_buf, jnp.asarray(gidx))
+            jnp.asarray(active), self._gen_buf, jnp.asarray(gidx),
+            self._bt() if self.paged else None)
         # wait for device compute (still no host transfer) so the tick
         # latency sensor — and the sc_chunk controller acting on its p99 —
         # measures real decode time, not async dispatch depth
@@ -423,6 +591,9 @@ class ServeEngine:
             self._free_slots.append(slot)
             self.pool.free(req.req_id)
             self.slot_pos[slot] = -1
+            if self.paged:
+                self._bt_np[slot] = -1
+                self._bt_dirty = True
 
     def close(self) -> None:
         for sc in (self.sc_queue, self.sc_kv, self.sc_chunk):

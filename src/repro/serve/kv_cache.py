@@ -43,6 +43,7 @@ def kv_bytes_per_token(cfg: ArchConfig) -> int:
 class _Seq:
     seq_id: int
     blocks: int
+    tokens: int = 0     # logical tokens covered (for fragmentation stats)
 
 
 class KVBlockPool:
@@ -71,6 +72,8 @@ class KVBlockPool:
         have = seq.blocks if seq else 0
         delta = need - have
         if delta <= 0:
+            if seq is not None:
+                seq.tokens = max(seq.tokens, tokens)
             return True
         if self.used_blocks + delta > self.max_blocks:
             self.alloc_failures += 1
@@ -78,6 +81,7 @@ class KVBlockPool:
         if seq is None:
             seq = self._seqs[seq_id] = _Seq(seq_id, 0)
         seq.blocks += delta
+        seq.tokens = max(seq.tokens, tokens)
         self.used_blocks += delta
         if self.accountant is not None:
             self.accountant.charge("kv_cache", delta * self.block_bytes)
@@ -98,3 +102,16 @@ class KVBlockPool:
     @property
     def live_seqs(self) -> int:
         return len(self._seqs)
+
+    @property
+    def over_budget(self) -> bool:
+        """Occupancy above the SmartConf budget — §4.2 temporary
+        inconsistency while live sequences drain."""
+        return self.used_blocks > self.max_blocks
+
+    @property
+    def frag_tokens(self) -> int:
+        """Allocated-but-unused tail tokens across live sequences (the
+        block-granularity internal fragmentation the sensors export)."""
+        return sum(s.blocks * self.block_tokens - s.tokens
+                   for s in self._seqs.values())

@@ -1,0 +1,175 @@
+"""Physical block-table allocator behind the paged KV cache.
+
+Where :class:`~repro.serve.kv_cache.KVBlockPool` is a purely logical byte
+ledger over a dense ``[max_batch, cache_len]`` cache, this allocator manages
+a *real* resource: the identifier space of a physical block store
+(``[capacity, kv_heads, block_tokens, head_dim]`` device arrays per
+attention layer, owned by the engine).  ``serve.kv_block_budget`` therefore
+actuates HBM, not a number:
+
+  * admission reserves a per-sequence **block table** (physical block ids,
+    drawn LIFO from a free list) covering the sequence's full extent — no
+    cache-tree copy, no movement of other sequences' blocks (copy-free
+    admission);
+  * ``free`` returns the ids; the next admission reuses them;
+  * shrinking the budget below occupancy reports ``over_budget`` — the
+    engine preempts lowest-priority sequences back to the queue (paper §4.2
+    temporary-inconsistency semantics) and then physically resizes the
+    store via :meth:`compact` / :meth:`grow`.
+
+The accountant entry ``kv_cache`` tracks the *store capacity* — the bytes
+the block store actually pins in HBM — so budget cuts move ``hbm_bytes``
+itself, not just a ledger.  All bookkeeping is O(blocks touched); a failed
+:meth:`ensure` changes neither the tables nor the ledger.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.sensors import HBMAccountant
+from .kv_cache import kv_bytes_per_token
+
+__all__ = ["PagedKVAllocator"]
+
+
+class PagedKVAllocator:
+    """Free-list allocator over ``capacity`` physical KV blocks.
+
+    Exposes the same budget/occupancy surface as ``KVBlockPool``
+    (``ensure`` / ``free`` / ``set_budget`` / ``used_blocks`` /
+    ``alloc_failures`` / ``over_budget`` / ``frag_tokens``) so the engine's
+    SmartConf wiring is mode-agnostic, plus the physical-side API
+    (``table_row`` / ``compact`` / ``grow``).
+    """
+
+    def __init__(self, cfg: ArchConfig, *, block_tokens: int,
+                 max_blocks_per_seq: int, capacity_blocks: int,
+                 budget_blocks: int | None = None,
+                 accountant: HBMAccountant | None = None) -> None:
+        self.cfg = cfg
+        self.block_tokens = block_tokens
+        self.block_bytes = kv_bytes_per_token(cfg) * block_tokens
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.accountant = accountant
+        self.capacity = int(capacity_blocks)
+        # SmartConf budget (logical threshold; capacity tracks it physically)
+        self.max_blocks = int(budget_blocks if budget_blocks is not None
+                              else capacity_blocks)
+        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self._tables: dict[int, list[int]] = {}
+        self._tokens: dict[int, int] = {}
+        self.used_blocks = 0
+        self.alloc_failures = 0
+        self._charge_capacity()
+
+    # ----------------------------------------------------------- accounting
+    def _charge_capacity(self) -> None:
+        if self.accountant is not None:
+            self.accountant.set("kv_cache", self.capacity * self.block_bytes)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.used_blocks * self.block_bytes
+
+    @property
+    def live_seqs(self) -> int:
+        return len(self._tables)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def over_budget(self) -> bool:
+        """Occupancy above the SmartConf budget (tolerated, §4.2) — the
+        engine's preemption trigger."""
+        return self.used_blocks > self.max_blocks
+
+    @property
+    def frag_tokens(self) -> int:
+        """Allocated-but-unused tail tokens across live sequences (internal
+        fragmentation of the last block plus up-front reservation)."""
+        return sum(len(t) * self.block_tokens - self._tokens[s]
+                   for s, t in self._tables.items())
+
+    # --------------------------------------------------------------- budget
+    def set_budget(self, max_blocks: int) -> None:
+        """Threshold update only; physical enforcement (preemption + store
+        resize) is the engine's job because it owns slots and device arrays."""
+        self.max_blocks = max(1, int(max_blocks))
+
+    # ----------------------------------------------------------- allocation
+    def ensure(self, seq_id: int, tokens: int) -> bool:
+        """Grow ``seq_id``'s table to cover ``tokens`` logical tokens; False
+        (with no state change) if the budget or the free list blocks it."""
+        tokens = min(tokens, self.max_blocks_per_seq * self.block_tokens)
+        need = (tokens + self.block_tokens - 1) // self.block_tokens
+        table = self._tables.get(seq_id)
+        have = len(table) if table is not None else 0
+        delta = need - have
+        if delta <= 0:
+            self._tokens[seq_id] = max(self._tokens.get(seq_id, 0), tokens)
+            return True
+        if (self.used_blocks + delta > self.max_blocks
+                or delta > len(self._free)):
+            self.alloc_failures += 1
+            return False
+        if table is None:
+            table = self._tables[seq_id] = []
+        table.extend(self._free.pop() for _ in range(delta))
+        self.used_blocks += delta
+        self._tokens[seq_id] = max(self._tokens.get(seq_id, 0), tokens)
+        return True
+
+    def free(self, seq_id: int) -> None:
+        table = self._tables.pop(seq_id, None)
+        self._tokens.pop(seq_id, None)
+        if table is None:
+            return
+        self.used_blocks -= len(table)
+        self._free.extend(reversed(table))   # LIFO reuse keeps ids warm
+
+    def table_row(self, seq_id: int) -> np.ndarray:
+        """[max_blocks_per_seq] int32 physical ids, -1-padded — one row of
+        the device block-table operand."""
+        row = np.full((self.max_blocks_per_seq,), -1, np.int32)
+        table = self._tables.get(seq_id)
+        if table:
+            row[:len(table)] = table
+        return row
+
+    # ------------------------------------------------------ physical resize
+    def compact(self, new_capacity: int) -> np.ndarray:
+        """Shrink to ``new_capacity`` blocks.  Live blocks are renumbered
+        densely into ``[0, used_blocks)`` (tables updated in place); returns
+        ``keep`` — old physical ids, one per new slot — for the engine to
+        gather the store arrays with (``new_store = old_store[keep]``)."""
+        if not self.used_blocks <= new_capacity <= self.capacity:
+            raise ValueError(
+                f"compact({new_capacity}) with used={self.used_blocks} "
+                f"capacity={self.capacity}")
+        keep = np.zeros((new_capacity,), np.int32)   # unused slots -> old 0
+        nxt = 0
+        for seq_id in sorted(self._tables):
+            table = self._tables[seq_id]
+            for j, old in enumerate(table):
+                keep[nxt] = old
+                table[j] = nxt
+                nxt += 1
+        self.capacity = int(new_capacity)
+        self._free = list(range(new_capacity - 1, nxt - 1, -1))
+        self._charge_capacity()
+        return keep
+
+    def grow(self, new_capacity: int) -> int:
+        """Extend the id space; returns the number of blocks added.  The
+        engine zero-pads the store arrays to match."""
+        if new_capacity < self.capacity:
+            raise ValueError(f"grow({new_capacity}) below {self.capacity}")
+        added = int(new_capacity) - self.capacity
+        self._free[:0] = range(int(new_capacity) - 1, self.capacity - 1, -1)
+        self.capacity = int(new_capacity)
+        self._charge_capacity()
+        return added

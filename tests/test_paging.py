@@ -1,0 +1,267 @@
+"""Paged KV subsystem: allocator invariants, engine integration (token
+parity vs dense, preemption under budget cuts, physical HBM actuation), and
+the bench_serving smoke gate."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.sensors import HBMAccountant
+from repro.models import zoo
+from repro.serve import PagedKVAllocator, Request, ServeEngine
+from repro.serve.kv_cache import KVBlockPool
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _alloc(cfg, *, capacity=8, bps=4, bt=16, accountant=None, budget=None):
+    return PagedKVAllocator(cfg, block_tokens=bt, max_blocks_per_seq=bps,
+                            capacity_blocks=capacity, budget_blocks=budget,
+                            accountant=accountant)
+
+
+# --------------------------------------------------------------- allocator
+def test_allocator_block_reuse_after_free(small_model):
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    assert pool.ensure(1, 40)                    # 3 blocks
+    ids1 = [b for b in pool.table_row(1) if b >= 0]
+    assert len(ids1) == 3 and pool.used_blocks == 3
+    pool.free(1)
+    assert pool.used_blocks == 0 and pool.free_blocks == 8
+    assert pool.ensure(2, 40)
+    ids2 = [b for b in pool.table_row(2) if b >= 0]
+    assert ids2 == ids1                          # LIFO: freed ids come back
+
+    pool.free(99)                                # unknown seq: no-op
+    pool.free(2)
+    pool.free(2)                                 # double free: no-op
+    assert pool.used_blocks == 0 and pool.live_seqs == 0
+
+
+def test_allocator_copy_free_admission(small_model):
+    """Admitting a new sequence must not move any existing sequence's
+    blocks — tables are append-only until free/compact."""
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    assert pool.ensure(1, 30)
+    before = pool.table_row(1).copy()
+    assert pool.ensure(2, 50)
+    assert pool.ensure(1, 60)                    # grow seq 1 itself
+    after = pool.table_row(1)
+    np.testing.assert_array_equal(before[before >= 0],
+                                  after[:len(before[before >= 0])])
+    # distinct sequences never share physical blocks
+    all_ids = [b for s in (1, 2) for b in pool.table_row(s) if b >= 0]
+    assert len(all_ids) == len(set(all_ids))
+
+
+def test_allocator_failure_keeps_accountant_consistent(small_model):
+    """A failed ensure must change neither tables nor the HBM ledger; the
+    ledger always equals capacity * block_bytes (physical store truth)."""
+    cfg, _ = small_model
+    acc = HBMAccountant()
+    pool = _alloc(cfg, capacity=4, bps=4, accountant=acc)
+    store_bytes = lambda: acc.breakdown().get("kv_cache", 0)
+    assert store_bytes() == 4 * pool.block_bytes
+    assert pool.ensure(1, 48)                    # 3 of 4 blocks
+    assert store_bytes() == 4 * pool.block_bytes
+    used0, frag0 = pool.used_blocks, pool.frag_tokens
+    assert not pool.ensure(2, 32)                # free list exhausted
+    assert pool.alloc_failures == 1
+    assert pool.used_blocks == used0 and pool.frag_tokens == frag0
+    assert store_bytes() == 4 * pool.block_bytes  # ledger untouched
+    # budget-blocked failure, same invariants
+    pool.set_budget(3)
+    assert not pool.ensure(3, 16)
+    assert pool.alloc_failures == 2
+    assert store_bytes() == 4 * pool.block_bytes
+
+
+def test_allocator_budget_shrink_and_compact(small_model):
+    cfg, _ = small_model
+    acc = HBMAccountant()
+    pool = _alloc(cfg, capacity=8, bps=4, accountant=acc)
+    assert pool.ensure(1, 40)                    # 3 blocks
+    assert pool.ensure(2, 20)                    # 2 blocks
+    pool.set_budget(3)
+    assert pool.over_budget                      # 5 used > 3 budget
+    pool.free(2)
+    assert not pool.over_budget
+    old_ids = [b for b in pool.table_row(1) if b >= 0]
+    keep = pool.compact(4)
+    assert pool.capacity == 4
+    assert acc.breakdown()["kv_cache"] == 4 * pool.block_bytes  # HBM freed
+    # remap correctness: new table slot j must point at old physical id
+    new_ids = [b for b in pool.table_row(1) if b >= 0]
+    assert [keep[j] for j in new_ids] == old_ids
+    assert pool.free_blocks == 4 - pool.used_blocks
+    grown = pool.grow(8)
+    assert grown == 4 and pool.capacity == 8
+    assert acc.breakdown()["kv_cache"] == 8 * pool.block_bytes
+
+
+def test_allocator_fragmentation_sensor(small_model):
+    cfg, _ = small_model
+    pool = _alloc(cfg, bt=16)
+    assert pool.ensure(1, 20)                    # 2 blocks = 32 tokens
+    assert pool.frag_tokens == 12
+    assert pool.ensure(1, 30)                    # same blocks, less waste
+    assert pool.frag_tokens == 2
+    pool.free(1)
+    assert pool.frag_tokens == 0
+
+
+def test_dense_pool_pressure_sensors(small_model):
+    """Satellite parity: the dense KVBlockPool exports the same
+    over_budget / frag_tokens surface."""
+    cfg, _ = small_model
+    pool = KVBlockPool(cfg, block_tokens=16, max_blocks=4)
+    assert pool.ensure(1, 20)
+    assert pool.frag_tokens == 12
+    assert not pool.over_budget
+    pool.set_budget(1)
+    assert pool.over_budget
+    pool.free(1)
+    assert pool.frag_tokens == 0 and not pool.over_budget
+
+
+# ------------------------------------------------------------------ engine
+def test_engine_paged_token_identical_to_dense(small_model, rng):
+    """Acceptance: paged decode is token-identical to the dense path on an
+    end-to-end serve run (mixed lengths, multi-chunk prefills, slot reuse)."""
+    cfg, params = small_model
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 9, 23, 37, 60)]
+    outs = {}
+    for mode in ("paged", "dense"):
+        eng = ServeEngine(cfg, params, max_batch=3, cache_len=96,
+                          enable_smartconf=False, kv_mode=mode)
+        assert eng.paged == (mode == "paged")
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 6))
+        ticks = 0
+        while len(eng.finished) < len(prompts) and ticks < 300:
+            stats = eng.tick()
+            ticks += 1
+        assert len(eng.finished) == len(prompts), mode
+        outs[mode] = {r.req_id: r.generated for r in eng.finished}
+        for key in ("kv_used_blocks", "kv_over_budget", "kv_frag_tokens",
+                    "kv_capacity_blocks", "preemptions"):
+            assert key in stats                  # pool-pressure sensors
+        eng.close()
+    assert outs["paged"] == outs["dense"]
+
+
+def test_engine_budget_cut_frees_hbm_and_preempts(small_model, rng):
+    """Acceptance: a kv_block_budget cut on a paged engine preempts the
+    lowest-priority (latest-scheduled) sequence back to the queue and
+    physically shrinks the block store (hbm_bytes drops); the preempted
+    request later finishes with its full, recomputed output."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=3, cache_len=96,
+                      enable_smartconf=False, kv_mode="paged")
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 20)
+                           .astype(np.int32), 40))
+    for _ in range(5):
+        eng.tick()
+    assert len(eng.running) == 3
+    order = sorted(eng.running.values(), key=lambda r: r.admit_seq)
+    hbm0 = eng.hbm_bytes()
+    eng.set_kv_budget(eng.blocks_per_seq)        # one sequence's worth
+    eng.tick()
+    assert eng.hbm_bytes() < hbm0, "cut must reduce physical hbm"
+    assert eng.preemptions >= 1
+    # LIFO preemption: the earliest-admitted request is still resident
+    assert order[0].slot is not None and order[0].preempted == 0
+    assert order[-1].preempted == 1 and order[-1].slot is None
+    fails_while_cut = eng.pool.alloc_failures    # real rejections only
+    eng.set_kv_budget(3 * eng.blocks_per_seq)    # restore
+    ticks = 0
+    while len(eng.finished) < 3 and ticks < 400:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 3
+    assert all(len(r.generated) == 40 for r in eng.finished)
+    # sensor hygiene across the preempt/readmit cycle: once the budget is
+    # restored, regrowing the store for readmission is not an allocation
+    # failure, and a preempted request contributes exactly one TTFT sample
+    assert eng.pool.alloc_failures == fails_while_cut
+    assert len(eng.ttft._buf) == 3
+    eng.close()
+
+
+def test_engine_paged_admission_is_copy_free(small_model, rng):
+    """Scheduling a request into a paged engine touches block tables only:
+    the store arrays (cache tree leaves) are not reallocated or copied."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      enable_smartconf=False, kv_mode="paged")
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 4))
+    leaves_before = [id(x) for x in jax.tree.leaves(eng.caches)]
+    eng._admit()
+    eng._schedule()
+    assert 0 in {r.req_id for r in eng.prefilling.values()}
+    assert [id(x) for x in jax.tree.leaves(eng.caches)] == leaves_before
+    eng.close()
+
+
+def test_engine_paged_pallas_interpret_matches_xla(small_model, rng):
+    """The real Pallas paged kernel (interpret mode), driven end-to-end
+    through the engine, must reproduce the XLA oracle path token-for-token."""
+    cfg, params = small_model
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (7, 30)]
+    outs = {}
+    for impl in ("xla", "pallas_interpret"):
+        os.environ["REPRO_PAGED_IMPL"] = impl
+        try:
+            eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                              enable_smartconf=False, kv_mode="paged")
+            for i, p in enumerate(prompts):
+                eng.submit(Request(i, p, 4))
+            ticks = 0
+            while len(eng.finished) < len(prompts) and ticks < 100:
+                eng.tick()
+                ticks += 1
+            assert len(eng.finished) == len(prompts), impl
+            outs[impl] = {r.req_id: r.generated for r in eng.finished}
+            eng.close()
+        finally:
+            os.environ.pop("REPRO_PAGED_IMPL", None)
+    assert outs["xla"] == outs["pallas_interpret"]
+
+
+# ------------------------------------------------------- bench smoke gate
+def test_bench_serving_smoke():
+    """Tier-1 gate on benchmarks/bench_serving.py: the smoke run exercises
+    legacy+bucketed prefill, paged+dense decode, and both budget-cut paths
+    (with its own internal paged/dense token-parity assertion)."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import bench_serving
+
+    rows = bench_serving.run(smoke=True)
+    names = {r.split(",")[0] for r in rows}
+    assert {"serving_prefill_legacy", "serving_prefill_bucketed",
+            "serving_decode_paged", "serving_decode_dense",
+            "serving_kv_budget_cut_paged",
+            "serving_kv_budget_cut_dense"} <= names
+    cut = {r.split(",")[0]: r for r in rows}
+    paged_freed = int(cut["serving_kv_budget_cut_paged"]
+                      .split("freed=")[1].split()[0])
+    dense_freed = int(cut["serving_kv_budget_cut_dense"]
+                      .split("freed=")[1].split()[0])
+    assert paged_freed > 0, "paged budget cut must free physical hbm"
+    assert dense_freed == 0, "dense budget cut only moves the ledger"
