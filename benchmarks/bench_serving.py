@@ -12,7 +12,12 @@ the SmartConf serve controllers are evaluated against.  Rows report:
   * the ``serve.kv_block_budget`` actuation check: cutting the budget on a
     paged engine must drop ``hbm_bytes`` (the physical block store shrinks,
     preempting sequences), while on a dense engine the same cut only moves
-    the logical ledger.
+    the logical ledger,
+  * mixed-arch rows (``serving_arch_*``): the same legacy-vs-bucketed
+    comparison for the families universal chunked prefill newly unlocked —
+    a recurrent arch (rwkv6), a hybrid recurrent/attention arch
+    (recurrentgemma), and a MoE arch (deepseek) — each asserted
+    token-identical between the two paths.
 
 Reduced config on CPU — the *ratios* (compile count, relative tokens/s,
 hbm deltas) are the reproducible signal, not absolute microseconds.
@@ -193,6 +198,41 @@ def run(smoke: bool = False) -> list[str]:
             f"serving_kv_budget_cut_{m}", 0.0,
             f"hbm_before={hbm0} hbm_after={hbm1} freed={hbm0 - hbm1} "
             f"preempted={pre}"))
+
+    # ---- universal chunked prefill: the newly-unlocked families ----------
+    import dataclasses
+
+    mixed = ["rwkv6-7b", "deepseek-moe-16b"]
+    if not smoke:
+        mixed.append("recurrentgemma-9b")
+    for arch in mixed:
+        acfg = reduced(get_config(arch))
+        if acfg.moe:
+            # ample expert capacity -> deterministic routing, so the
+            # legacy/bucketed token-identity assertion is exact
+            acfg = dataclasses.replace(acfg, capacity_factor=8.0)
+        aparams, _ = zoo.init(acfg, jax.random.key(0))
+        aprompts = _workload(acfg.vocab_size, n_requests)
+        ares = {m: _run_engine(acfg, aparams, aprompts, m,
+                               max_batch=max_batch, cache_len=cache_len,
+                               max_new=max_new)
+                for m in ("legacy", "bucketed")}
+        assert ares["legacy"]["generated"] == ares["bucketed"]["generated"], \
+            f"{arch}: bucketed chunked prefill diverged from one-shot"
+        short = arch.split("-")[0]
+        for mode, r in ares.items():
+            rows.append(fmt_row(
+                f"serving_arch_{short}_{mode}",
+                r["wall_s"] / r["ticks"] * 1e6,
+                f"compiles={r['prefill_compiles']} "
+                f"ttft_p50_ms={r['ttft_p50']*1e3:.1f} "
+                f"ttft_p99_ms={r['ttft_p99']*1e3:.1f}"))
+        rows.append(fmt_row(
+            f"serving_arch_{short}_compile_reduction", 0.0,
+            f"legacy/bucketed="
+            f"{ares['legacy']['prefill_compiles'] / max(1, ares['bucketed']['prefill_compiles']):.1f}x "
+            f"ttft_p50_legacy/bucketed="
+            f"{ares['legacy']['ttft_p50'] / max(ares['bucketed']['ttft_p50'], 1e-9):.2f}x"))
     return rows
 
 

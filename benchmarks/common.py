@@ -5,7 +5,6 @@ from __future__ import annotations
 import collections
 import time
 
-import numpy as np
 
 from repro.core import fit_model
 from repro.core import simenv as se

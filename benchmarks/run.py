@@ -3,10 +3,25 @@
 Prints ``name,us_per_call,derived`` CSV rows (stdout).  Heavy model-level
 benches run on reduced configs; the full-size numbers come from the dry-run
 artifacts (see EXPERIMENTS.md).
+
+Usage::
+
+    python benchmarks/run.py                       # every section
+    python benchmarks/run.py bench_serving         # one section
+    python benchmarks/run.py bench_serving --smoke # tiny CI instance
+    python benchmarks/run.py --json out.json       # also write rows as JSON
+
+``--smoke`` is forwarded to sections whose ``run()`` accepts it (CI keeps
+the serving benchmark from rotting via ``test_bench_serving_smoke``);
+``--json`` records the rows as structured data so CI can upload the per-PR
+perf trajectory as a workflow artifact.
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import os
 import sys
 
@@ -16,18 +31,48 @@ os.makedirs(os.path.join(os.path.dirname(__file__), "..", "experiments"),
             exist_ok=True)
 
 
-def main() -> None:
+def _sections():
     from benchmarks import (bench_alternatives, bench_casestudy,
                             bench_compression, bench_interacting,
                             bench_overhead, bench_roofline, bench_serving,
                             bench_tradeoff)
 
+    mods = (bench_tradeoff, bench_casestudy, bench_alternatives,
+            bench_interacting, bench_overhead, bench_compression,
+            bench_serving, bench_roofline)
+    return {m.__name__.rsplit(".", 1)[-1]: m for m in mods}
+
+
+def main(argv: list[str] | None = None) -> None:
+    sections = _sections()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sections", nargs="*", choices=[[], *sections],
+                    help="section names to run (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instance of each section that supports it")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON list to PATH")
+    args = ap.parse_args(argv)
+
+    picked = args.sections or list(sections)
+    rows: list[str] = []
     print("name,us_per_call,derived")
-    for mod in (bench_tradeoff, bench_casestudy, bench_alternatives,
-                bench_interacting, bench_overhead, bench_compression,
-                bench_serving, bench_roofline):
-        for row in mod.run():
+    for name in picked:
+        mod = sections[name]
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
+        for row in mod.run(**kwargs):
+            rows.append(row)
             print(row, flush=True)
+    if args.json:
+        recs = []
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            recs.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=2)
 
 
 if __name__ == "__main__":

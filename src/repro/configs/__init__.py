@@ -4,6 +4,9 @@ import importlib
 
 from .base import ArchConfig, ShapeConfig, SHAPES, reduced
 
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "reduced", "ARCH_IDS",
+           "get_config", "cells"]
+
 _MODULES = {
     "h2o-danube-3-4b": "h2o_danube3_4b",
     "starcoder2-15b": "starcoder2_15b",

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_grads",
            "sp_decode_combine"]

@@ -1,3 +1,40 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel families (flash/decode/paged attention, rwkv6, rglru).
+
+Each family package holds the kernel (`<name>.py`), a pure-jnp oracle
+(`ref.py`), and a thin dispatcher (`ops.py`).  Every dispatcher resolves its
+implementation through :func:`resolve_impl`, the single place defining the
+``xla | pallas | pallas_interpret`` semantics:
+
+  * ``xla``              — run the oracle (exact jnp reference);
+  * ``pallas``           — run the compiled Pallas TPU kernel;
+  * ``pallas_interpret`` — run the Pallas kernel in interpreter mode, so CPU
+    CI exercises the real kernel code path end-to-end.
+
+Resolution order: explicit ``force=`` argument, then the family's environment
+variable (``REPRO_ATTN_IMPL``, ``REPRO_PAGED_IMPL``, ``REPRO_RWKV6_IMPL``,
+``REPRO_RGLRU_IMPL``), then the backend default (``pallas`` on TPU, ``xla``
+everywhere else).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+IMPLS = ("xla", "pallas", "pallas_interpret")
+
+
+def resolve_impl(force: str | None = None, env_var: str | None = None) -> str:
+    """Resolve a kernel implementation choice to one of :data:`IMPLS`."""
+    mode = force
+    if mode is None and env_var:
+        mode = os.environ.get(env_var) or None
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode not in IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {mode!r}"
+            + (f" (from ${env_var})" if force is None and env_var else "")
+            + f"; expected one of {IMPLS}")
+    return mode

@@ -1,16 +1,19 @@
-"""Jitted wrapper with backend dispatch (pallas on TPU, XLA elsewhere)."""
+"""Jitted wrapper with backend dispatch (pallas on TPU, XLA elsewhere);
+``REPRO_ATTN_IMPL`` overrides (see :func:`repro.kernels.resolve_impl`)."""
 
 from __future__ import annotations
 
-import jax
+from repro.kernels import resolve_impl
 
 from .decode_attention import decode_attention
 from .ref import decode_attention_ref
 
+ENV_VAR = "REPRO_ATTN_IMPL"
+
 
 def decode_attention_op(q, k, v, k_pos, q_pos, *, window: int = 0,
                         force: str | None = None):
-    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    mode = resolve_impl(force, ENV_VAR)
     if mode == "xla":
         return decode_attention_ref(q, k, v, k_pos, q_pos, window=window)
     return decode_attention(q, k, v, k_pos, q_pos, window=window,

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .flash_attention import DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, NEG_INF
+from .flash_attention import DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q
 
 
 def _mask(qi, ki, bq, bkv, *, causal, window, seq_len, shape):

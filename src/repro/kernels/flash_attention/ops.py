@@ -1,17 +1,18 @@
 """Jitted wrapper: picks the Pallas kernel on TPU, the exact XLA chunked path
-elsewhere (and in dry-runs so GSPMD sees plain einsums)."""
+elsewhere (and in dry-runs so GSPMD sees plain einsums).  ``REPRO_ATTN_IMPL``
+overrides the automatic choice (see :func:`repro.kernels.resolve_impl`)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_impl
+
 from .flash_attention import flash_attention
 from .ref import attention_ref
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+ENV_VAR = "REPRO_ATTN_IMPL"
 
 
 def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -22,7 +23,7 @@ def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    mode = force or ("pallas" if _on_tpu() else "xla")
+    mode = resolve_impl(force, ENV_VAR)
     if mode == "xla":
         out = attention_ref(qt, kt, vt, causal=causal, window=window)
     else:

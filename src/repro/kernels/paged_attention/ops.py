@@ -7,19 +7,17 @@ real kernel end-to-end through the serve engine.
 
 from __future__ import annotations
 
-import os
-
-import jax
+from repro.kernels import resolve_impl
 
 from .paged_attention import paged_decode_attention
 from .ref import paged_decode_attention_ref
 
+ENV_VAR = "REPRO_PAGED_IMPL"
+
 
 def paged_decode_attention_op(q, k_store, v_store, block_tables, q_pos, *,
                               window: int = 0, force: str | None = None):
-    mode = force or os.environ.get("REPRO_PAGED_IMPL")
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    mode = resolve_impl(force, ENV_VAR)
     if mode == "xla":
         return paged_decode_attention_ref(q, k_store, v_store, block_tables,
                                           q_pos, window=window)

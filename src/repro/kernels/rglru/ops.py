@@ -1,15 +1,28 @@
-"""Backend dispatch for the RG-LRU scan."""
+"""Backend dispatch for the RG-LRU scan (``REPRO_RGLRU_IMPL``)."""
 
 from __future__ import annotations
 
-import jax
+from repro.kernels import resolve_impl
 
-from .ref import rglru_ref
-from .rglru import rglru_scan
+from .ref import rglru_ref, rglru_ref_state
+from .rglru import rglru_scan, rglru_scan_state
+
+ENV_VAR = "REPRO_RGLRU_IMPL"
 
 
 def rglru_op(log_a, b, *, force: str | None = None):
-    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    mode = resolve_impl(force, ENV_VAR)
     if mode == "xla":
         return rglru_ref(log_a, b)
     return rglru_scan(log_a, b, interpret=(mode == "pallas_interpret"))
+
+
+def rglru_state_op(log_a, b, h0, *, force: str | None = None):
+    """State-in/state-out scan: (h, h_out) with the recurrence seeded from
+    ``h0``.  The chunked-prefill entry point: per-row scan state is carried
+    across chunk boundaries by the caller (kernels/README.md)."""
+    mode = resolve_impl(force, ENV_VAR)
+    if mode == "xla":
+        return rglru_ref_state(log_a, b, h0)
+    return rglru_scan_state(log_a, b, h0,
+                            interpret=(mode == "pallas_interpret"))

@@ -1,4 +1,9 @@
-"""Naive scan oracle for the RG-LRU recurrence."""
+"""Naive scan oracle for the RG-LRU recurrence.
+
+``rglru_ref_state`` is the state-in/state-out variant backing chunked
+prefill: the hidden state h is seeded from the caller's carried value and
+the post-sequence state is returned alongside the per-token outputs.
+"""
 
 from __future__ import annotations
 
@@ -6,15 +11,21 @@ import jax
 import jax.numpy as jnp
 
 
-def rglru_ref(log_a, b):
-    """log_a, b: [B, S, F] -> h [B, S, F], h_{-1} = 0."""
+def rglru_ref_state(log_a, b, h0):
+    """log_a, b: [B, S, F]; h0: [B, F] f32 carried state.
+    Returns (h [B, S, F], h_out [B, F] f32)."""
 
     def step(h, inp):
         la, bb = inp
         h = jnp.exp(la.astype(jnp.float32)) * h + bb.astype(jnp.float32)
         return h, h
 
-    h0 = jnp.zeros(log_a.shape[::2], jnp.float32)  # [B, F]
     xs = (jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(b, 1, 0))
-    _, hs = jax.lax.scan(step, h0, xs)
-    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)
+    h_out, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype), h_out
+
+
+def rglru_ref(log_a, b):
+    """log_a, b: [B, S, F] -> h [B, S, F], h_{-1} = 0."""
+    h0 = jnp.zeros(log_a.shape[::2], jnp.float32)  # [B, F]
+    return rglru_ref_state(log_a, b, h0)[0]

@@ -7,6 +7,12 @@ the carried hidden state for the current (batch, feature-block) persists in
 VMEM scratch.  Within a chunk the recurrence unrolls as a fori_loop over
 rows — each step is a fused VPU multiply-add over the feature block, with all
 chunk data resident in VMEM (one HBM read per element, the minimum).
+
+``rglru_scan_state`` is the state-in/state-out variant: the scratch is
+seeded from a caller-provided h0 [B, F] and the post-sequence state comes
+back as a second output — the scan-state ABI chunked prefill threads across
+per-row chunk boundaries (see kernels/README.md).  ``rglru_scan`` is the
+zero-init wrapper.
 """
 
 from __future__ import annotations
@@ -22,12 +28,12 @@ CHUNK = 128
 BLOCK_F = 512
 
 
-def _kernel(loga_ref, b_ref, h_ref, h_scr, *, chunk: int):
+def _kernel(loga_ref, b_ref, h0_ref, h_ref, hout_ref, h_scr, *, chunk: int):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
-        h_scr[...] = jnp.zeros_like(h_scr)
+        h_scr[...] = h0_ref[:].astype(jnp.float32)
 
     log_a = loga_ref[0].astype(jnp.float32)    # [L, F]
     b = b_ref[0].astype(jnp.float32)           # [L, F]
@@ -43,28 +49,47 @@ def _kernel(loga_ref, b_ref, h_ref, h_scr, *, chunk: int):
     h_fin, out = jax.lax.fori_loop(0, chunk, step, (h0, out0))
     h_scr[...] = h_fin[None, :]
     h_ref[0] = out.astype(h_ref.dtype)
+    hout_ref[...] = h_scr[...]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_f", "interpret"))
-def rglru_scan(log_a: jax.Array, b: jax.Array, *, chunk: int = CHUNK,
-               block_f: int = BLOCK_F, interpret: bool = False) -> jax.Array:
-    """log_a, b: [B, S, F] -> h: [B, S, F] with h_0 = b_0 (zero init)."""
+def rglru_scan_state(log_a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                     chunk: int = CHUNK, block_f: int = BLOCK_F,
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """log_a, b: [B, S, F]; h0: [B, F] f32 carried state.
+    Returns (h [B, S, F], h_out [B, F] f32)."""
     bsz, s, f = log_a.shape
     chunk = min(chunk, s)
     block_f = min(block_f, f)
     assert s % chunk == 0 and f % block_f == 0
     grid = (bsz, f // block_f, s // chunk)
-    out = pl.pallas_call(
+    h, h_out = pl.pallas_call(
         functools.partial(_kernel, chunk=chunk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, chunk, block_f), lambda b_, fi, ci: (b_, ci, fi)),
             pl.BlockSpec((1, chunk, block_f), lambda b_, fi, ci: (b_, ci, fi)),
+            pl.BlockSpec((1, block_f), lambda b_, fi, ci: (b_, fi)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, block_f),
-                               lambda b_, fi, ci: (b_, ci, fi)),
-        out_shape=jax.ShapeDtypeStruct((bsz, s, f), b.dtype),
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_f),
+                         lambda b_, fi, ci: (b_, ci, fi)),
+            pl.BlockSpec((1, block_f), lambda b_, fi, ci: (b_, fi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, f), b.dtype),
+            jax.ShapeDtypeStruct((bsz, f), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((1, block_f), jnp.float32)],
         interpret=interpret,
-    )(log_a, b)
-    return out
+    )(log_a, b, h0.astype(jnp.float32))
+    return h, h_out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_f", "interpret"))
+def rglru_scan(log_a: jax.Array, b: jax.Array, *, chunk: int = CHUNK,
+               block_f: int = BLOCK_F, interpret: bool = False) -> jax.Array:
+    """log_a, b: [B, S, F] -> h: [B, S, F] with h_{-1} = 0 (zero init)."""
+    h0 = jnp.zeros(log_a.shape[::2], jnp.float32)
+    return rglru_scan_state(log_a, b, h0, chunk=chunk, block_f=block_f,
+                            interpret=interpret)[0]

@@ -1,16 +1,30 @@
-"""Backend dispatch for the RWKV6 time-mix core."""
+"""Backend dispatch for the RWKV6 time-mix core (``REPRO_RWKV6_IMPL``)."""
 
 from __future__ import annotations
 
-import jax
+from repro.kernels import resolve_impl
 
-from .ref import rwkv6_ref
-from .rwkv6 import rwkv6_scan
+from .ref import rwkv6_ref, rwkv6_ref_state
+from .rwkv6 import rwkv6_scan, rwkv6_scan_state
+
+ENV_VAR = "REPRO_RWKV6_IMPL"
 
 
 def rwkv6_op(r, k, v, logw, u, *, force: str | None = None):
-    mode = force or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    mode = resolve_impl(force, ENV_VAR)
     if mode == "xla":
         return rwkv6_ref(r, k, v, logw, u)
     return rwkv6_scan(r, k, v, logw, u,
                       interpret=(mode == "pallas_interpret"))
+
+
+def rwkv6_state_op(r, k, v, logw, u, s0, *, force: str | None = None):
+    """State-in/state-out time mix: (y, s_out) with S seeded from ``s0``.
+
+    The chunked-prefill entry point: per-row scan state is carried across
+    chunk boundaries by the caller (see kernels/README.md, scan-state ABI)."""
+    mode = resolve_impl(force, ENV_VAR)
+    if mode == "xla":
+        return rwkv6_ref_state(r, k, v, logw, u, s0)
+    return rwkv6_scan_state(r, k, v, logw, u, s0,
+                            interpret=(mode == "pallas_interpret"))

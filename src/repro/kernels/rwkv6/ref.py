@@ -1,4 +1,10 @@
-"""Naive per-token RWKV-6 recurrence — the oracle."""
+"""Naive per-token RWKV-6 recurrence — the oracle.
+
+``rwkv6_ref_state`` is the state-in/state-out variant backing chunked
+prefill: the caller supplies the state matrix carried across chunk
+boundaries and receives the state after the last token, exactly as chunked
+attention attends through (and writes back into) the KV cache.
+"""
 
 from __future__ import annotations
 
@@ -6,9 +12,9 @@ import jax
 import jax.numpy as jnp
 
 
-def rwkv6_ref(r, k, v, logw, u):
-    """r,k,v,logw: [BH, S, N]; u: [BH, N] -> y [BH, S, N]."""
-    bh, s, n = r.shape
+def rwkv6_ref_state(r, k, v, logw, u, s0):
+    """r,k,v,logw: [BH, S, N]; u: [BH, N]; s0: [BH, N, N] f32 state carried
+    in.  Returns (y [BH, S, N], s_out [BH, N, N] f32)."""
 
     def step(S, inp):
         r_t, k_t, v_t, lw_t = inp                       # [BH, N]
@@ -18,7 +24,14 @@ def rwkv6_ref(r, k, v, logw, u):
         S = w_t[..., None] * S + kv
         return S, y
 
-    S0 = jnp.zeros((bh, n, n), jnp.float32)
-    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, logw))
-    _, ys = jax.lax.scan(step, S0, xs)
-    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, logw))
+    s_out, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_out
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: [BH, S, N]; u: [BH, N] -> y [BH, S, N] (zero init state)."""
+    bh, _, n = r.shape
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    return rwkv6_ref_state(r, k, v, logw, u, s0)[0]

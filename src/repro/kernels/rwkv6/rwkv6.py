@@ -13,6 +13,11 @@ of length L the kernel computes (all f32 in VMEM):
 which is exactly ``models.rwkv6.time_mix_chunked``'s math; the oracle in
 ``ref.py`` is the naive per-token recurrence both are tested against.
 
+``rwkv6_scan_state`` is the state-in/state-out variant: S is seeded from a
+caller-provided matrix and the post-sequence state is returned as a second
+output — the scan-state ABI chunked prefill threads across per-row chunk
+boundaries (see kernels/README.md).  ``rwkv6_scan`` is the zero-init wrapper.
+
 The intra-chunk term contracts over (s, i) per output channel j; with L = 32
 and N = 64 the working set is MXU/VPU friendly and S stays resident, so HBM
 traffic is just the r/k/v/w chunk streams — the operational-intensity win the
@@ -32,12 +37,13 @@ HEAD_DIM = 64
 CHUNK = 32
 
 
-def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *, chunk: int):
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            s_scr, *, chunk: int):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _init():
-        s_scr[...] = jnp.zeros_like(s_scr)
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
 
     r = r_ref[0].astype(jnp.float32)       # [L, N]
     k = k_ref[0].astype(jnp.float32)
@@ -72,20 +78,23 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *, chunk: int):
         preferred_element_type=jnp.float32)
 
     y_ref[0] = (y_intra + y_diag + y_cross).astype(y_ref.dtype)
+    sout_ref[0] = s_scr[...]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
-               u: jax.Array, *, chunk: int = CHUNK,
-               interpret: bool = False) -> jax.Array:
-    """r,k,v,logw: [BH, S, N]; u: [BH, N] -> y [BH, S, N].
+def rwkv6_scan_state(r: jax.Array, k: jax.Array, v: jax.Array,
+                     logw: jax.Array, u: jax.Array, s0: jax.Array, *,
+                     chunk: int = CHUNK,
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,logw: [BH, S, N]; u: [BH, N]; s0: [BH, N, N] f32 carried state.
+    Returns (y [BH, S, N], s_out [BH, N, N] f32).
 
     BH = batch * heads flattened; S must be a multiple of ``chunk``."""
     bh, s, n = r.shape
     assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
     grid = (bh, s // chunk)
     u2 = u[:, None, :]
-    out = pl.pallas_call(
+    y, s_out = pl.pallas_call(
         functools.partial(_kernel, chunk=chunk),
         grid=grid,
         in_specs=[
@@ -94,10 +103,28 @@ def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
             pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
             pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
             pl.BlockSpec((1, 1, n), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, n), r.dtype),
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, n), r.dtype),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
         interpret=interpret,
-    )(r, k, v, logw, u2)
-    return out
+    )(r, k, v, logw, u2, s0.astype(jnp.float32))
+    return y, s_out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+               u: jax.Array, *, chunk: int = CHUNK,
+               interpret: bool = False) -> jax.Array:
+    """Zero-init-state wrapper: r,k,v,logw [BH, S, N]; u [BH, N] -> y."""
+    bh, _, n = r.shape
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    return rwkv6_scan_state(r, k, v, logw, u, s0, chunk=chunk,
+                            interpret=interpret)[0]

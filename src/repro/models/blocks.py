@@ -27,6 +27,9 @@ from . import layers, moe as moe_lib, rglru as rglru_lib, rwkv6 as rwkv6_lib
 from .layers import apply_norm, norm_init
 
 ATTN_KINDS = ("full", "swa", "local", "global", "bidir")
+# kinds the chunked/bucketed prefill path can serve: attention via position
+# masking, recurrent via the state-in/state-out scan kernels
+CHUNKABLE_KINDS = ATTN_KINDS + ("rwkv6", "rglru")
 
 
 def split_kind(kind: str) -> tuple[str, bool]:
@@ -234,74 +237,120 @@ def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
                       block_tables: jax.Array | None = None):
     """x: [B,C,d] padded prompt chunk; pos: [B,C] absolute positions
     (row-wise contiguous, left-aligned); valid: [B,C] bool marks real
-    tokens (False = pad or inactive slot); cache: attention KV cache.
-    With ``block_tables`` ([B,M] int32) the cache is a paged block store:
-    chunk K/V are scattered into physical blocks first, then queries attend
-    to the table-gathered logical view (write-then-gather is exact because
-    rows prefill front-to-back, so every position <= q_pos is written).
+    tokens (False = pad or inactive slot); cache: attention KV cache or
+    recurrent state.  With ``block_tables`` ([B,M] int32, attention kinds
+    only) the cache is a paged block store: chunk K/V are scattered into
+    physical blocks first, then queries attend to the table-gathered logical
+    view (write-then-gather is exact because rows prefill front-to-back, so
+    every position <= q_pos is written).
 
-    Queries attend to (prior cache entries ++ in-chunk keys) under one
-    softmax, so a chunk mid-prompt sees its full history exactly.  Only the
-    last ``min(row_len, ring)`` valid K/V land in the cache (drop-mode
-    scatter), which both respects ring semantics and keeps pad/inactive rows
-    from ever touching cache state.  Dense attention kinds only — recurrent
-    blocks thread state sequentially and cannot skip their pads, and MoE
-    routing would let pads steal expert capacity from real tokens."""
+    Attention kinds: queries attend to (prior cache entries ++ in-chunk
+    keys) under one softmax, so a chunk mid-prompt sees its full history
+    exactly.  Only the last ``min(row_len, ring)`` valid K/V land in the
+    cache (drop-mode scatter), which both respects ring semantics and keeps
+    pad/inactive rows from ever touching cache state.
+
+    Recurrent kinds (rwkv6 / rglru): scan state is threaded across the
+    chunk boundary through the state-in/state-out kernel variants — pads are
+    neutralized (decay 1, input 0) so per-row state advances over valid
+    tokens only (the scan-state ABI, kernels/README.md).
+
+    MoE FFNs route with ``valid``-aware capacity so pad tokens cannot steal
+    expert slots from real ones (overflow semantics unchanged)."""
     base, is_moe = split_kind(kind)
-    if base not in ATTN_KINDS or is_moe:
-        raise ValueError(f"chunked prefill requires dense attention blocks, "
-                         f"got {kind!r}")
     aux = jnp.zeros((), jnp.float32)
-    theta = _theta(cfg, base)
-    h = apply_norm(cfg.norm, params["ln1"], x)
-    q = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"]),
-                    pos, theta)
-    k = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
-                    pos, theta)
-    v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
 
-    window = cfg.window if base in ("swa", "local") else 0
-    if block_tables is not None:
-        cache = _paged_scatter(cache, k, v, pos, valid, block_tables)
-        k_eff, v_eff, kpos_eff = _paged_view(cache, block_tables)
-        o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff,
-                                   q_pos=pos, window=window)
-        x = x + layers.attn_output(params["attn"], o)
+    if base in ("rwkv6", "rglru"):
+        # a row whose chunk starts at position 0 is beginning its prompt in
+        # a (possibly reused) slot: its scan state must restart from zero.
+        # Attention caches mask the previous occupant's entries by position;
+        # recurrent state has no positions, so the reset is explicit here.
+        fresh = (pos[:, 0] == 0) & valid[:, 0]               # [B]
+
+        def reset(st):
+            return jax.tree.map(
+                lambda a: jnp.where(
+                    fresh.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    jnp.zeros_like(a), a), st)
+
+        cache = reset(cache)
+
+    if base == "rwkv6":
+        p = params["tm_cm"]
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        y, S_new, tm_last = rwkv6_lib.time_mix_chunk(
+            p, h, cache["S"], cache["tm_last"], valid)
+        x = x + y
         h2 = apply_norm(cfg.norm, params["ln2"], x)
-        x = x + layers.mlp(params["mlp"], h2, cfg.mlp)
-        return x, cache, aux
+        cm_out, cm_last = rwkv6_lib.channel_mix_chunk(
+            p, h2, cache["cm_last"], valid)
+        x = x + cm_out
+        new_cache = {"S": S_new.astype(cache["S"].dtype),
+                     "tm_last": tm_last.astype(cache["tm_last"].dtype),
+                     "cm_last": cm_last.astype(cache["cm_last"].dtype)}
+        return x, new_cache, aux
 
-    kpos_chunk = jnp.where(valid, pos, -1).astype(jnp.int32)
-    # cache entries at/after the chunk start are stale (a freed slot's
-    # previous occupant); this row's true history is strictly before it
-    kpos_cache = jnp.where(cache["pos"] < pos[:, :1], cache["pos"], -1)
-    k_eff = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
-    v_eff = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
-    kpos_eff = jnp.concatenate([kpos_cache, kpos_chunk], axis=1)
-    o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff, q_pos=pos,
-                               window=window)
-    x = x + layers.attn_output(params["attn"], o)
+    if base == "rglru":
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        y, new_cache = rglru_lib.rglru_chunk(params["rglru"], h, cache, valid)
+        x = x + y
+    elif base in ATTN_KINDS:
+        theta = _theta(cfg, base)
+        h = apply_norm(cfg.norm, params["ln1"], x)
+        q = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"]),
+                        pos, theta)
+        k = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
+                        pos, theta)
+        v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
 
-    # write-back: keep only each row's last min(len, n) valid positions so
-    # ring slots are written at most once per call (scatter stays exact)
-    n = cache["k"].shape[1]
-    row_len = valid.sum(axis=1).astype(jnp.int32)            # [B]
-    last_pos = pos[:, 0] + row_len - 1
-    keep = valid & (pos > (last_pos - n)[:, None])
-    slots = jnp.where(keep, pos % n, n).astype(jnp.int32)    # n => dropped
-    bidx = jnp.arange(x.shape[0])[:, None]
-    cache = {
-        "k": cache["k"].at[bidx, slots].set(
-            k.astype(cache["k"].dtype), mode="drop"),
-        "v": cache["v"].at[bidx, slots].set(
-            v.astype(cache["v"].dtype), mode="drop"),
-        "pos": cache["pos"].at[bidx, slots].set(
-            pos.astype(jnp.int32), mode="drop"),
-    }
+        window = cfg.window if base in ("swa", "local") else 0
+        if block_tables is not None:
+            new_cache = _paged_scatter(cache, k, v, pos, valid, block_tables)
+            k_eff, v_eff, kpos_eff = _paged_view(new_cache, block_tables)
+            o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff,
+                                       q_pos=pos, window=window)
+            x = x + layers.attn_output(params["attn"], o)
+        else:
+            kpos_chunk = jnp.where(valid, pos, -1).astype(jnp.int32)
+            # cache entries at/after the chunk start are stale (a freed
+            # slot's previous occupant); true history is strictly before it
+            kpos_cache = jnp.where(cache["pos"] < pos[:, :1],
+                                   cache["pos"], -1)
+            k_eff = jnp.concatenate(
+                [cache["k"], k.astype(cache["k"].dtype)], axis=1)
+            v_eff = jnp.concatenate(
+                [cache["v"], v.astype(cache["v"].dtype)], axis=1)
+            kpos_eff = jnp.concatenate([kpos_cache, kpos_chunk], axis=1)
+            o = layers.chunk_attention(q, k_eff, v_eff, k_pos=kpos_eff,
+                                       q_pos=pos, window=window)
+            x = x + layers.attn_output(params["attn"], o)
+
+            # write-back: keep only each row's last min(len, n) valid
+            # positions so ring slots are written at most once per call
+            n = cache["k"].shape[1]
+            row_len = valid.sum(axis=1).astype(jnp.int32)        # [B]
+            last_pos = pos[:, 0] + row_len - 1
+            keep = valid & (pos > (last_pos - n)[:, None])
+            slots = jnp.where(keep, pos % n, n).astype(jnp.int32)  # n => drop
+            bidx = jnp.arange(x.shape[0])[:, None]
+            new_cache = {
+                "k": cache["k"].at[bidx, slots].set(
+                    k.astype(cache["k"].dtype), mode="drop"),
+                "v": cache["v"].at[bidx, slots].set(
+                    v.astype(cache["v"].dtype), mode="drop"),
+                "pos": cache["pos"].at[bidx, slots].set(
+                    pos.astype(jnp.int32), mode="drop"),
+            }
+    else:
+        raise ValueError(f"chunked prefill cannot serve block kind {kind!r}")
 
     h2 = apply_norm(cfg.norm, params["ln2"], x)
-    x = x + layers.mlp(params["mlp"], h2, cfg.mlp)
-    return x, cache, aux
+    if is_moe:
+        y = moe_lib.moe_apply_ep(params["moe"], h2, cfg, valid=valid)
+    else:
+        y = layers.mlp(params["mlp"], h2, cfg.mlp)
+    x = x + y
+    return x, new_cache, aux
 
 
 # ---------------------------------------------------------------------------
@@ -385,7 +434,9 @@ def block_apply_step(cfg, kind: str, params: dict, x: jax.Array,
 
     h2 = apply_norm(cfg.norm, params["ln2"], x)
     if is_moe:
-        y = moe_lib.moe_apply_ep_serve(params["moe"], h2, cfg)
+        y = moe_lib.moe_apply_ep_serve(
+            params["moe"], h2, cfg,
+            valid=None if active is None else active[:, None])
     else:
         y = layers.mlp(params["mlp"], h2, cfg.mlp)
     x = x + y

@@ -13,7 +13,6 @@ replaces the inner computation on real TPUs; see kernels/*/ops.py).
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax

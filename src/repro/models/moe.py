@@ -65,8 +65,30 @@ def _group_shape(batch: int, seq: int) -> tuple[int, int]:
     return batch * (seq // g_tokens), g_tokens
 
 
-def moe_apply(params: dict, x: jax.Array, cfg, *, return_aux: bool = False):
-    """x: [B, S, d] -> [B, S, d] (+ aux load-balance loss scalar)."""
+def _valid_cap(nv, cap: int, cfg):
+    """Drop threshold for a group with ``nv`` REAL tokens (traced scalar or
+    [G] vector): capacity scales with the valid-token count so padding can
+    neither steal nor inflate expert capacity.  ``cap`` (static, computed
+    over the padded group size) stays the slot-table shape and upper bound."""
+    cap_v = jnp.ceil(nv.astype(jnp.float32) * cfg.top_k / cfg.num_experts
+                     * cfg.capacity_factor)
+    return jnp.clip(cap_v.astype(jnp.int32), 1, cap)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, return_aux: bool = False,
+              valid: jax.Array | None = None):
+    """x: [B, S, d] -> [B, S, d] (+ aux load-balance loss scalar).
+
+    ``valid`` ([B, S] bool, optional) marks real tokens in a padded chunk
+    (chunked prefill / masked decode): invalid tokens are excluded from the
+    position-in-expert count AND the per-group capacity is clamped to
+    ``ceil(n_valid * k / e * capacity_factor)``, so pads neither steal nor
+    inflate expert capacity — capacity is computed over valid tokens.  Note
+    that under capacity *overflow* the drop pattern still depends on how
+    tokens are grouped (a chunked prompt is dispatched in chunk-sized
+    groups, the one-shot path in up-to-``GROUP_TOKENS`` groups), so chunked
+    and one-shot prefill are token-identical only when routing is drop-free
+    (ample ``capacity_factor``; serving keeps drops exceptional)."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
     g, gt = _group_shape(b, s)
@@ -83,9 +105,17 @@ def moe_apply(params: dict, x: jax.Array, cfg, *, return_aux: bool = False):
     # position of each assignment inside its expert (token-major priority)
     flat_i = top_i.reshape(g, gt * k)                             # [G,TK]
     onehot = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)           # [G,TK,E]
+    if valid is not None:
+        # token-major repeat matches flat_i's [T, K] -> [T*K] layout
+        valid_flat = jnp.repeat(valid.reshape(g, gt), k, axis=1)  # [G,TK]
+        onehot = onehot * valid_flat[..., None].astype(jnp.int32)
     pos = jnp.cumsum(onehot, axis=1) - onehot                     # prior count
     pos = jnp.take_along_axis(pos, flat_i[..., None], axis=2)[..., 0]  # [G,TK]
-    keep = pos < cap
+    if valid is None:
+        keep = pos < cap
+    else:
+        cap_v = _valid_cap(valid.reshape(g, gt).sum(axis=1), cap, cfg)
+        keep = valid_flat & (pos < cap_v[:, None])
 
     # slot tables: token index per (expert, capacity) slot
     token_ids = jnp.tile(jnp.arange(gt, dtype=jnp.int32)[:, None], (1, k)) \
@@ -181,9 +211,10 @@ def moe_reference(params: dict, x: jax.Array, cfg) -> jax.Array:
 # the minimal EP collective (activation-sized, not dispatch-table-sized).
 
 
-def _moe_local(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
-               axis_name):
-    """Per-shard body: x_loc [B_loc, S, d]; w_* [E_local, d, m]."""
+def _moe_local(router, w_gate, w_up, w_down, x_loc, valid_loc, *, cfg,
+               e_local, axis_name):
+    """Per-shard body: x_loc [B_loc, S, d]; valid_loc [B_loc, S] bool;
+    w_* [E_local, d, m]."""
     b, s, d = x_loc.shape
     k = cfg.top_k
     e = cfg.num_experts
@@ -198,16 +229,19 @@ def _moe_local(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
     e0 = shard * e_local
     cap = max(1, math.ceil(t * k / e * cfg.capacity_factor))
 
-    # assignments targeting LOCAL experts only
+    # assignments targeting LOCAL experts only (invalid/pad tokens excluded
+    # from the slot count so they cannot steal capacity)
     flat_i = top_i.reshape(t * k)
     local_i = flat_i - e0                                 # [TK] in [0, e_local)
     is_local = (local_i >= 0) & (local_i < e_local)
+    is_local &= jnp.repeat(valid_loc.reshape(t), k)
     onehot = jax.nn.one_hot(jnp.where(is_local, local_i, e_local),
                             e_local + 1, dtype=jnp.int32)[:, :e_local]
     pos = jnp.cumsum(onehot, axis=0) - onehot
     pos = jnp.take_along_axis(
         pos, jnp.clip(local_i, 0, e_local - 1)[:, None], axis=1)[:, 0]
-    keep = is_local & (pos < cap)
+    # drop threshold scales with the REAL token count (see _valid_cap)
+    keep = is_local & (pos < _valid_cap(valid_loc.sum(), cap, cfg))
 
     token_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
     slot_tok = jnp.full((e_local, cap), t, jnp.int32)
@@ -233,31 +267,35 @@ def _moe_local(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
     return routed.reshape(b, s, d)
 
 
-def moe_apply_ep(params: dict, x: jax.Array, cfg, *, return_aux: bool = False):
+def moe_apply_ep(params: dict, x: jax.Array, cfg, *, return_aux: bool = False,
+                 valid: jax.Array | None = None):
     """shard_map expert-parallel MoE.  Falls back to :func:`moe_apply` when
-    no mesh with a 'model' axis is active or experts don't divide it."""
+    no mesh with a 'model' axis is active or experts don't divide it.
+    ``valid`` masks pad tokens out of the capacity count (chunked prefill)."""
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import (current_mesh, logical_spec,
-                                            shard_map)
+    from repro.distributed.sharding import current_mesh, shard_map
 
     mesh = current_mesh()
     if (mesh is None or "model" not in mesh.axis_names
             or cfg.num_experts % mesh.shape["model"]
             or x.shape[0] % _dp_size(mesh)):
-        return moe_apply(params, x, cfg, return_aux=return_aux)
+        return moe_apply(params, x, cfg, return_aux=return_aux, valid=valid)
     e_local = cfg.num_experts // mesh.shape["model"]
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
 
+    if valid is None:
+        valid = jnp.ones(x.shape[:2], bool)
     fn = shard_map(
         partial(_moe_local, cfg=cfg, e_local=e_local, axis_name="model"),
         mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
-                  P("model", None, None), P(batch_spec, None, None)),
+                  P("model", None, None), P(batch_spec, None, None),
+                  P(batch_spec, None)),
         out_specs=P(batch_spec, None, None),
     )
     out = fn(params["router"], params["w_gate"], params["w_up"],
-             params["w_down"], x)
+             params["w_down"], x, valid)
 
     if "shared" in params:
         sh = params["shared"]
@@ -283,8 +321,8 @@ def _dp_size(mesh) -> int:
     return n
 
 
-def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
-                     dp_axes):
+def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, valid_loc, *, cfg,
+                     e_local, dp_axes):
     """Decode-path shard body: expert weights stay RESIDENT, 2D-sharded
     (experts x moe_ff); the (few) decode tokens are all-gathered instead.
     Collectives per layer = O(tokens * d), not O(weights)."""
@@ -293,8 +331,10 @@ def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
     e = cfg.num_experts
     # gather the token batch over the data axes (tiny at decode)
     x_all = x_loc
+    valid_all = valid_loc
     for ax in dp_axes:
         x_all = jax.lax.all_gather(x_all, ax, axis=0, tiled=True)
+        valid_all = jax.lax.all_gather(valid_all, ax, axis=0, tiled=True)
     t = x_all.shape[0] * s
     xt = x_all.reshape(t, d)
     logits = xt.astype(jnp.float32) @ router
@@ -306,15 +346,18 @@ def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
     e0 = shard_idx * e_local
     cap = max(1, math.ceil(t * k / e * cfg.capacity_factor))
 
+    # inactive-slot tokens are excluded from the capacity count, and the
+    # drop threshold scales with the REAL token count (see moe_apply)
     flat_i = top_i.reshape(t * k)
     local_i = flat_i - e0
     is_local = (local_i >= 0) & (local_i < e_local)
+    is_local &= jnp.repeat(valid_all.reshape(t), k)
     onehot = jax.nn.one_hot(jnp.where(is_local, local_i, e_local),
                             e_local + 1, dtype=jnp.int32)[:, :e_local]
     pos = jnp.cumsum(onehot, axis=0) - onehot
     pos = jnp.take_along_axis(
         pos, jnp.clip(local_i, 0, e_local - 1)[:, None], axis=1)[:, 0]
-    keep = is_local & (pos < cap)
+    keep = is_local & (pos < _valid_cap(valid_all.sum(), cap, cfg))
 
     token_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
     slot_tok = jnp.full((e_local, cap), t, jnp.int32)
@@ -349,8 +392,11 @@ def _moe_local_serve(router, w_gate, w_up, w_down, x_loc, *, cfg, e_local,
     return routed
 
 
-def moe_apply_ep_serve(params: dict, x: jax.Array, cfg):
-    """Decode-time EP: resident weights, token gather (see _moe_local_serve)."""
+def moe_apply_ep_serve(params: dict, x: jax.Array, cfg,
+                       valid: jax.Array | None = None):
+    """Decode-time EP: resident weights, token gather (see _moe_local_serve).
+    ``valid`` ([B, S] bool) masks inactive decode slots out of the capacity
+    count so a free slot's stale token can't steal an expert slot."""
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import current_mesh, shard_map
 
@@ -360,20 +406,23 @@ def moe_apply_ep_serve(params: dict, x: jax.Array, cfg):
             or cfg.num_experts % mesh.shape["model"]
             or cfg.moe_d_ff % _dp_size(mesh)
             or x.shape[0] % _dp_size(mesh)):
-        return moe_apply(params, x, cfg)
+        return moe_apply(params, x, cfg, valid=valid)
     e_local = cfg.num_experts // mesh.shape["model"]
     batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
     dspec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
 
+    if valid is None:
+        valid = jnp.ones(x.shape[:2], bool)
     fn = shard_map(
         partial(_moe_local_serve, cfg=cfg, e_local=e_local, dp_axes=dp_axes),
         mesh=mesh,
         in_specs=(P(), P("model", None, dspec), P("model", None, dspec),
-                  P("model", dspec, None), P(batch_spec, None, None)),
+                  P("model", dspec, None), P(batch_spec, None, None),
+                  P(batch_spec, None)),
         out_specs=P(batch_spec, None, None),
     )
     out = fn(params["router"], params["w_gate"], params["w_up"],
-             params["w_down"], x)
+             params["w_down"], x, valid)
     if "shared" in params:
         sh = params["shared"]
         hs = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])

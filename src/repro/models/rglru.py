@@ -92,6 +92,46 @@ def rglru_block(params, x, state):
     return y, new_state
 
 
+def rglru_chunk(params, x, state, valid):
+    """Padded-chunk RG-LRU for chunked prefill (scan-state ABI).
+
+    x: [B,C,d] chunk (row-wise left-aligned); valid: [B,C] bool marks real
+    tokens; state {h: [B,dr], conv: [B,W-1,dr]} carried across chunk
+    boundaries.  Pads are neutralized before the kernel — a = 1 (log_a = 0)
+    and gated input 0 — so h passes through them unchanged; the conv carry
+    advances to each row's last W-1 *valid* inputs.  Dispatches the
+    recurrence through ``kernels.rglru.rglru_state_op`` (ref / Pallas).
+    Returns (y [B,C,d], state')."""
+    from repro.kernels.rglru import rglru_state_op
+
+    b, c, _ = x.shape
+    u = x @ params["w_in"]
+    u = shard(u, "batch", "seq", "ff")
+    ext = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    w = params["conv_w"]
+    u_conv = sum(ext[:, i:i + c, :] * w[i] for i in range(CONV_WIDTH))
+    log_a, inp = _gates(params, u_conv)
+    vm = valid[:, :, None]
+    log_a = jnp.where(vm, log_a, 0.0)
+    inp = jnp.where(vm, inp, 0.0)
+    # pad time to a kernel-chunk multiple with more neutral tokens
+    from repro.kernels.rglru.rglru import CHUNK as KCHUNK
+    cp = -(-c // KCHUNK) * KCHUNK if c > KCHUNK else c
+    tpad = [(0, 0), (0, cp - c), (0, 0)]
+    h_seq, h_out = rglru_state_op(jnp.pad(log_a, tpad), jnp.pad(inp, tpad),
+                                  state["h"])
+    h_seq = h_seq[:, :c]
+    # conv carry: the last W-1 entries of [old conv ++ valid inputs] per row
+    lengths = valid.sum(axis=1).astype(jnp.int32)
+    idx = lengths[:, None] + jnp.arange(CONV_WIDTH - 1, dtype=jnp.int32)
+    new_conv = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+    new_state = {"h": h_out.astype(state["h"].dtype),
+                 "conv": new_conv.astype(state["conv"].dtype)}
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32))
+    y = (h_seq.astype(jnp.float32) * gate).astype(x.dtype) @ params["w_out"]
+    return y, new_state
+
+
 def rglru_step(params, x_t, state):
     """One decode token.  x_t: [B,d]."""
     u = x_t @ params["w_in"]

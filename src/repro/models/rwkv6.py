@@ -161,6 +161,73 @@ def time_mix_chunked(params, x, state, x_last):
     return out, state, x[:, -1, :]
 
 
+def _last_valid(seq, prev, lengths):
+    """Per-row last *valid* timestep of ``seq`` [B,S,d]; rows with
+    ``lengths == 0`` keep their carried ``prev`` [B,d]."""
+    idx = jnp.clip(lengths - 1, 0, seq.shape[1] - 1)
+    picked = jnp.take_along_axis(seq, idx[:, None, None], axis=1)[:, 0]
+    return jnp.where((lengths > 0)[:, None], picked, prev)
+
+
+def time_mix_chunk(params, x, state, x_last, valid):
+    """Padded-chunk time mix for chunked prefill (scan-state ABI).
+
+    x: [B,C,d] ln1-normalized chunk (row-wise left-aligned); valid: [B,C]
+    bool marks real tokens.  Pad tokens are neutralized before the kernel —
+    decay w = 1 (logw = 0) and k = 0 — so S passes through them unchanged and
+    the returned state equals the state after each row's last valid token;
+    outputs at pad positions are garbage (callers mask by position).  Rows
+    with no valid tokens keep (S, x_last) untouched.  Dispatches the
+    recurrence through ``kernels.rwkv6.rwkv6_state_op`` (ref / Pallas).
+    Returns (y [B,C,d], state' [B,H,N,N], x_last' [B,d])."""
+    from repro.kernels.rwkv6 import rwkv6_state_op
+
+    b, c, d = x.shape
+    h = d // HEAD_DIM
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, logw = _projections(params, x, x_prev)
+    rh, kh, vh = _heads(r, h), _heads(k, h), _heads(v, h)   # [B,C,H,N]
+    lwh = _heads(logw, h)
+    vm = valid[:, :, None, None]
+    kh = jnp.where(vm, kh, 0.0)
+    lwh = jnp.where(vm, lwh, 0.0)
+    rh = jnp.where(vm, rh, 0.0)
+    vh = jnp.where(vm, vh, 0.0)
+
+    # pad time to a kernel-chunk multiple with more neutral tokens
+    cp = -(-c // CHUNK) * CHUNK
+    pad = [(0, 0), (0, cp - c), (0, 0), (0, 0)]
+
+    def to_bh(t):
+        t = jnp.pad(t.astype(jnp.float32), pad)
+        return jnp.swapaxes(t, 1, 2).reshape(b * h, cp, HEAD_DIM)
+
+    u = jnp.broadcast_to(params["u"].astype(jnp.float32)[None],
+                         (b, h, HEAD_DIM)).reshape(b * h, HEAD_DIM)
+    y, s_out = rwkv6_state_op(*map(to_bh, (rh, kh, vh, lwh)), u,
+                              state.reshape(b * h, HEAD_DIM, HEAD_DIM))
+    y = jnp.swapaxes(y.reshape(b, h, cp, HEAD_DIM), 1, 2)[:, :c]
+    state = s_out.reshape(b, h, HEAD_DIM, HEAD_DIM)
+
+    y = _groupnorm(y, params["ln_scale"], h)
+    y = y * jax.nn.silu(g)
+    out = y.astype(x.dtype) @ params["wo"]
+    lengths = valid.sum(axis=1).astype(jnp.int32)
+    return out, state, _last_valid(x, x_last, lengths)
+
+
+def channel_mix_chunk(params, x, x_last, valid):
+    """Padded-chunk channel mix: like :func:`channel_mix` on [B,C,d] but the
+    carried token-shift value advances to each row's last *valid* position
+    (pads and inactive rows never touch it)."""
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xk = _mix(x, x_prev, params["cm_mu"])
+    hidden = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
+    hidden = shard(hidden, "batch", "seq", "ff")
+    lengths = valid.sum(axis=1).astype(jnp.int32)
+    return hidden @ params["cm_v"], _last_valid(x, x_last, lengths)
+
+
 def time_mix_step(params, x_t, state, x_last):
     """One decode step.  x_t: [B,d]; state [B,H,N,N]; x_last [B,d]."""
     b, d = x_t.shape

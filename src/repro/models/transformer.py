@@ -19,7 +19,6 @@ Public entry points (all pure):
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -27,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import A, Axes, shard
 from . import blocks as B
-from .layers import _dense_init, apply_norm, norm_init, attention, rope
+from .layers import _dense_init, apply_norm, norm_init, attention
 from . import layers
 
 LOSS_CHUNK = 512
@@ -356,7 +355,6 @@ def init_cache(cfg, batch: int, cache_len: int):
         caches["rem"] = [B.block_cache_init(cfg, k, batch, cache_len)
                          for k in rem]
     if cfg.encoder_decoder:
-        hd = cfg.resolved_head_dim
         caches["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
     return caches
 
@@ -379,27 +377,34 @@ def prefill(cfg, params, batch, *, cache_len: int):
     return logits, caches
 
 
+def _all_kinds(cfg) -> set:
+    return set(cfg.block_pattern) | {k for k in (_plan(cfg)[0] or ())}
+
+
 def supports_chunked_prefill(cfg) -> bool:
-    """Chunked/bucketed (padded) prefill needs every block to be position-
-    maskable: attention kinds only.  Recurrent blocks (rwkv6/rglru) thread
-    state through pad tokens, the vision/encoder-decoder frontends carry
-    unpadded prefixes, and MoE routing lets pad tokens steal expert capacity
-    from real ones, so those families keep the exact one-shot path."""
-    if cfg.encoder_decoder or cfg.frontend == "vision" or cfg.moe:
+    """Chunked/bucketed (padded) prefill needs every block to either be
+    position-maskable (attention kinds) or to thread scan state across chunk
+    boundaries through the state-in/state-out kernel variants (rwkv6/rglru,
+    with pads neutralized); MoE routing is pad-aware, so MoE archs qualify
+    too.  Only the vision/encoder-decoder frontends — whose unpadded
+    modality prefixes have no chunk representation — keep the exact one-shot
+    path, and requesting chunked prefill for them raises."""
+    if cfg.encoder_decoder or cfg.frontend == "vision":
         return False
-    kinds = set(cfg.block_pattern) | {k for k in
-                                      (_plan(cfg)[0] or ())}
-    return all(B.split_kind(k)[0] in B.ATTN_KINDS for k in kinds)
+    return all(B.split_kind(k)[0] in B.CHUNKABLE_KINDS
+               for k in _all_kinds(cfg))
 
 
 def supports_paged_kv(cfg) -> bool:
-    """Paged KV (block-table cache + paged decode kernel) is selected
-    per-arch like ``supports_chunked_prefill`` and currently shares its
-    condition: every block must be a dense-attention kind, and prefill must
-    go through the chunked path (the one-shot legacy prefill builds a dense
-    per-slot cache that has no paged equivalent).  Recurrent blocks carry
-    O(1) state — nothing to page."""
-    return supports_chunked_prefill(cfg)
+    """Paged KV (block-table cache + paged decode kernel) needs every block
+    to be a dense-attention kind (MoE FFNs are fine — only the attention
+    K/V is paged) and prefill to go through the chunked path (the one-shot
+    legacy prefill builds a dense per-slot cache with no paged equivalent).
+    Recurrent blocks carry O(1) state — nothing to page — so rwkv6/rglru
+    archs serve chunked prefill from the dense per-slot cache instead."""
+    if not supports_chunked_prefill(cfg):
+        return False
+    return all(B.split_kind(k)[0] in B.ATTN_KINDS for k in _all_kinds(cfg))
 
 
 def init_paged_cache(cfg, num_blocks: int, block_tokens: int):
@@ -448,11 +453,15 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths,
 
     tokens: [B,C] int32 (row-wise left-aligned, zero-padded); start: [B]
     absolute position of each row's first chunk token; lengths: [B] valid
-    tokens this chunk (0 = inactive row: no cache writes, garbage logits).
-    ``block_tables`` ([B,M] int32, optional) switches the caches to paged
-    block stores.  Returns (next-token logits [B,V] at each row's last valid
-    position, caches).  Chunks attend to prior chunks through the cache, so
-    calling this repeatedly over a long prompt is exact chunked prefill."""
+    tokens this chunk (0 = inactive row: no cache/state writes, garbage
+    logits).  ``block_tables`` ([B,M] int32, optional) switches the
+    attention caches to paged block stores.  Returns (next-token logits
+    [B,V] at each row's last valid position, caches).  Attention chunks
+    attend to prior chunks through the cache; recurrent blocks thread their
+    scan state across the boundary (state-in/state-out kernels, pads
+    neutralized); MoE routing is ``valid``-aware — so calling this
+    repeatedly over a long prompt is exact chunked prefill for every
+    supported family."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
                          "does not support chunked prefill")
@@ -506,7 +515,6 @@ def decode_step(cfg, params, caches, token, pos, active=None,
     if "pos_emb" in params:
         x = x + params["pos_emb"][pos][:, None, :]
     enc_out = caches.get("enc_out") if cfg.encoder_decoder else None
-    aux = jnp.zeros((), jnp.float32)
     layer_idx = 0
 
     def maybe_cross(x, li):

@@ -9,7 +9,6 @@ re-jit boundary (quantized to divisors of the batch), not a runtime scalar.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

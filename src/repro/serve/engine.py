@@ -47,13 +47,19 @@ KV residency (the paged-KV tentpole):
     bounds the *physical* store, so budget cuts below occupancy preempt the
     lowest-priority sequence back to the queue (recompute on re-admission)
     and shrink the store arrays, actually releasing HBM rather than only
-    moving the ledger.  Archs with recurrent/MoE/modality blocks keep the
-    dense path (``kv_mode="auto"``, selected like
-    ``supports_chunked_prefill``).
+    moving the ledger.  Paged KV covers every arch whose blocks are all
+    attention kinds — including MoE (only attention K/V is paged); archs
+    with recurrent blocks (O(1) state, nothing to page) and the modality
+    frontends keep the dense path (``kv_mode="auto"``).
 
-Models whose blocks cannot be position-masked (recurrent, MoE routing,
-modality prefixes) keep the exact one-shot prefill path automatically
-(``prefill_mode="auto"``).
+Universal chunked prefill: every text-only family serves the bucketed/
+chunked path — attention kinds via position masking, recurrent kinds
+(rwkv6/rglru) by threading scan state across chunk boundaries through the
+state-in/state-out kernel variants, and MoE via pad-aware router capacity —
+so ``serve.prefill_chunk_tokens`` actuates uniformly across the zoo.  Only
+the vision/encoder-decoder frontends (unpadded modality prefixes) keep the
+exact one-shot path under ``prefill_mode="auto"``, and that fallback warns
+loudly; requesting ``bucketed`` for them raises.
 """
 
 from __future__ import annotations
@@ -61,6 +67,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -74,12 +81,23 @@ from repro.core import (ControllerModel, GoalSpec, HBMAccountant,
 from repro.core.smartconf import ConfRegistry
 from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
-from .kv_cache import KVBlockPool, kv_bytes_per_token, QUEUE_TOKEN_BYTES
+from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
 from .paging import PagedKVAllocator
 
 __all__ = ["Request", "ServeEngine"]
 
 _MIN_BUCKET = 16
+
+
+def _one_shot_reason(cfg: ArchConfig) -> str:
+    """Why this arch cannot leave the one-shot prefill path (the only
+    remaining families after universal chunked prefill are the modality
+    frontends, whose unpadded prefixes have no chunk representation)."""
+    if cfg.encoder_decoder:
+        return "the encoder-decoder frontend"
+    if cfg.frontend == "vision":
+        return "the vision-prefix frontend"
+    return f"block pattern {cfg.block_pattern}"
 
 
 def _bucket(n: int) -> int:
@@ -127,10 +145,19 @@ class ServeEngine:
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if prefill_mode == "bucketed" and not zoo.supports_chunked_prefill(cfg):
             raise ValueError(
-                f"{cfg.name}: block pattern {cfg.block_pattern} does not "
-                "support bucketed (chunked) prefill; use prefill_mode='auto'")
+                f"{cfg.name}: {_one_shot_reason(cfg)} cannot serve bucketed "
+                "(chunked) prefill; only prefill_mode='legacy' (one-shot) "
+                "is available for this family")
         self.fused_prefill = (prefill_mode == "bucketed" or (
             prefill_mode == "auto" and zoo.supports_chunked_prefill(cfg)))
+        if prefill_mode == "auto" and not self.fused_prefill:
+            # every text-only family (attention, recurrent, MoE) serves the
+            # fast path now; falling back is exceptional, so say it loudly —
+            # the serve.prefill_chunk_tokens knob will NOT actuate here
+            warnings.warn(
+                f"{cfg.name}: {_one_shot_reason(cfg)} keeps the one-shot "
+                "legacy prefill path; serve.prefill_chunk_tokens will not "
+                "actuate for this engine", RuntimeWarning, stacklevel=2)
 
         if kv_mode not in ("auto", "paged", "dense"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
@@ -519,8 +546,9 @@ class ServeEngine:
 
     # ------------------------------------------------ legacy one-shot prefill
     def _do_prefill_legacy(self, req: Request) -> None:
-        """Exact whole-prompt prefill for families the padded path can't
-        serve (recurrent state, MoE routing, modality prefixes)."""
+        """Exact whole-prompt prefill for the modality-frontend families the
+        padded path can't serve (vision/encoder-decoder prefixes), and for
+        explicit ``prefill_mode='legacy'`` baseline comparisons."""
         assert not self.paged, "legacy prefill has no paged-cache merge path"
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
         batch = {"tokens": prompt}

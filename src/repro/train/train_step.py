@@ -7,10 +7,8 @@ resolved against whatever mesh is active.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
@@ -32,7 +30,8 @@ __all__ = [
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
                     n_micro: int = 1, remat: str = "dots"):
     def train_step(params, opt_state, batch):
-        loss_f = lambda p, b: zoo.loss_fn(cfg, p, b, remat=remat)
+        def loss_f(p, b):
+            return zoo.loss_fn(cfg, p, b, remat=remat)
         loss, aux, grads = accum.accumulate_grads(loss_f, params, batch, n_micro)
         new_params, new_opt, metrics = adamw.update(grads, opt_state, params, opt_cfg)
         metrics = dict(metrics, loss=loss, **aux)

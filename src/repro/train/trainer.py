@@ -18,10 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer, latest_step, restore
 from repro.configs.base import ArchConfig

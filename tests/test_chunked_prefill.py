@@ -1,0 +1,206 @@
+"""Universal chunked prefill: token-identity against the one-shot oracle for
+EVERY zoo arch (attention, recurrent, hybrid, MoE), under the adversarial
+schedule the serve engine produces — ragged per-row lengths, chunk widths
+that do not divide the prompt, chunk boundaries mid-row, and rows going
+inactive at different ticks.  The two modality-frontend archs must refuse
+loudly instead of silently falling back."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import transformer, zoo
+
+CACHE_LEN = 64
+# ragged: three rows, none a multiple of the chunk width, all with a chunk
+# boundary mid-row; row 2 finishes first and must sit inactive afterwards
+ROW_LENS = (50, 37, 11)
+CHUNK = 13
+
+
+def _smoke_cfg(arch_id):
+    cfg = reduced(get_config(arch_id))
+    if cfg.moe:   # ample capacity -> deterministic routing for equivalence
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+def _run_chunked(cfg, params, prompts, chunk, cache_len):
+    """Engine-shaped schedule: every call advances each unfinished row by up
+    to ``chunk`` tokens; finished rows ride along with length 0.  Returns
+    (per-row completion logits, caches)."""
+    b = len(prompts)
+    caches = zoo.init_cache(cfg, b, cache_len)
+    prefilled = [0] * b
+    done_logits = {}
+    while any(prefilled[i] < len(prompts[i]) for i in range(b)):
+        tok = np.zeros((b, chunk), np.int32)
+        start = np.zeros((b,), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, p in enumerate(prompts):
+            n = min(chunk, len(p) - prefilled[i])
+            tok[i, :n] = p[prefilled[i]:prefilled[i] + n]
+            start[i] = prefilled[i]
+            lengths[i] = n
+        logits, caches = transformer.prefill_chunk(
+            cfg, params, caches, jnp.asarray(tok), jnp.asarray(start),
+            jnp.asarray(lengths))
+        for i, p in enumerate(prompts):
+            prefilled[i] += int(lengths[i])
+            if prefilled[i] >= len(p) and i not in done_logits:
+                done_logits[i] = logits[i]
+    return done_logits, caches
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_chunked_prefill_matches_one_shot_every_arch(arch_id, rng):
+    cfg = _smoke_cfg(arch_id)
+    if cfg.encoder_decoder or cfg.frontend == "vision":
+        # modality prefixes stay one-shot — and refuse loudly, not silently
+        assert not transformer.supports_chunked_prefill(cfg)
+        with pytest.raises(ValueError, match="chunked prefill"):
+            transformer.prefill_chunk(
+                cfg, None, None, jnp.zeros((1, 4), jnp.int32),
+                jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32))
+        return
+
+    assert transformer.supports_chunked_prefill(cfg), arch_id
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in ROW_LENS]
+
+    refs = [transformer.prefill(cfg, params, {"tokens": jnp.asarray(p[None])},
+                                cache_len=CACHE_LEN) for p in prompts]
+    done_logits, caches = _run_chunked(cfg, params, prompts, CHUNK, CACHE_LEN)
+
+    for i, (ref_logits, _) in enumerate(refs):
+        scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+        err = float(jnp.max(jnp.abs(done_logits[i] - ref_logits[0]))) / scale
+        assert err < 5e-3, f"{arch_id} row {i}: prefill rel={err:.2e}"
+
+    # one decode step from both caches: the fused cache must carry every
+    # row's exact state (attention K/V, recurrent scan state, token shifts)
+    tok = jnp.asarray([int(jnp.argmax(r[0][0])) for r in refs], jnp.int32)
+    pos = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    d_chk, _ = transformer.decode_step(cfg, params, caches, tok, pos)
+    for i, (_, ref_caches) in enumerate(refs):
+        d_ref, _ = transformer.decode_step(cfg, params, ref_caches,
+                                           tok[i:i + 1], pos[i:i + 1])
+        scale = float(jnp.max(jnp.abs(d_ref))) + 1e-9
+        err = float(jnp.max(jnp.abs(d_chk[i] - d_ref[0]))) / scale
+        assert err < 5e-3, f"{arch_id} row {i}: decode rel={err:.2e}"
+
+
+@pytest.mark.parametrize("arch_id", ["rwkv6-7b", "recurrentgemma-9b"])
+def test_recurrent_chunk_state_resets_on_slot_reuse(arch_id, rng):
+    """A row restarting at position 0 (slot handed to a new request, or a
+    preempted request recomputing) must begin from zero scan state, not the
+    previous occupant's."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    p1 = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+
+    # occupy row 0 with p1, then reuse it for p2 without clearing the cache
+    caches = zoo.init_cache(cfg, 1, CACHE_LEN)
+    _, caches = _run_chunked_into(cfg, params, caches, p1)
+    logits, _ = _run_chunked_into(cfg, params, caches, p2)
+
+    ref_logits, _ = transformer.prefill(
+        cfg, params, {"tokens": jnp.asarray(p2[None])}, cache_len=CACHE_LEN)
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits[0] - ref_logits[0]))) / scale
+    assert err < 5e-3, f"{arch_id}: stale state leaked, rel={err:.2e}"
+
+
+def _run_chunked_into(cfg, params, caches, prompt, chunk=8):
+    logits = None
+    for s in range(0, len(prompt), chunk):
+        n = min(chunk, len(prompt) - s)
+        tok = np.zeros((1, chunk), np.int32)
+        tok[0, :n] = prompt[s:s + n]
+        logits, caches = transformer.prefill_chunk(
+            cfg, params, caches, jnp.asarray(tok),
+            jnp.asarray([s], jnp.int32), jnp.asarray([n], jnp.int32))
+    return logits, caches
+
+
+def test_moe_chunk_pads_cannot_steal_capacity(rng):
+    """With tight capacity, the routed output at valid positions must be
+    independent of whatever garbage sits in the pad tail — i.e. pads consume
+    no expert slots (the failure mode that kept MoE off the chunked path)."""
+    from repro.models import moe as moe_lib
+    cfg = dataclasses.replace(reduced(get_config("deepseek-moe-16b")),
+                              capacity_factor=1.0)
+    params, _ = moe_lib.moe_init(jax.random.key(0), cfg)
+    b, s, nv = 2, 32, 20                     # 12 pad tokens per row
+    x_real = rng.standard_normal((b, s, cfg.d_model)).astype(np.float32)
+    valid = np.zeros((b, s), bool)
+    valid[:, :nv] = True
+
+    outs = []
+    for fill in (0.0, 7.0, -3.0):
+        x = x_real.copy()
+        x[:, nv:] = fill                     # adversarial pad contents
+        outs.append(np.asarray(
+            moe_lib.moe_apply(params, jnp.asarray(x), cfg,
+                              valid=jnp.asarray(valid)))[:, :nv])
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-6)
+
+    # ...nor can padding INFLATE capacity: the drop threshold must scale
+    # with the valid-token count, so the padded chunk routes exactly like
+    # the unpadded batch (same group, same token order, same capacity)
+    ref = np.asarray(moe_lib.moe_apply(
+        params, jnp.asarray(x_real[:, :nv]), cfg))
+    np.testing.assert_allclose(outs[0], ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_bucketed_matches_legacy_recurrent_slot_reuse(rng):
+    """End-to-end engine check on a hybrid recurrent arch with more requests
+    than slots: bucketed chunked prefill (with slot reuse and interleaved
+    decode) must generate token-identical output to the legacy engine."""
+    from repro.serve import Request, ServeEngine
+    cfg = _smoke_cfg("recurrentgemma-9b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 9, 23, 31, 45)]
+    outs = {}
+    for mode in ("legacy", "bucketed"):
+        eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                          enable_smartconf=False, prefill_mode=mode)
+        eng.prefill_chunk = 16          # force mid-prompt chunk boundaries
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 6))
+        ticks = 0
+        while len(eng.finished) < len(prompts) and ticks < 400:
+            eng.tick()
+            ticks += 1
+        assert len(eng.finished) == len(prompts), mode
+        outs[mode] = {r.req_id: list(r.generated) for r in eng.finished}
+        eng.close()
+    assert outs["legacy"] == outs["bucketed"]
+
+
+def test_recurrent_chunk_dispatches_pallas_kernels(rng, monkeypatch):
+    """REPRO_RWKV6_IMPL / REPRO_RGLRU_IMPL = pallas_interpret must route the
+    chunked-prefill scan through the state-in/state-out Pallas kernels and
+    still match the one-shot oracle."""
+    monkeypatch.setenv("REPRO_RWKV6_IMPL", "pallas_interpret")
+    monkeypatch.setenv("REPRO_RGLRU_IMPL", "pallas_interpret")
+    for arch_id in ("rwkv6-7b", "recurrentgemma-9b"):
+        cfg = _smoke_cfg(arch_id)
+        params, _ = zoo.init(cfg, jax.random.key(1))
+        prompt = rng.integers(0, cfg.vocab_size, 37).astype(np.int32)
+        ref_logits, _ = transformer.prefill(
+            cfg, params, {"tokens": jnp.asarray(prompt[None])},
+            cache_len=CACHE_LEN)
+        caches = zoo.init_cache(cfg, 1, CACHE_LEN)
+        logits, _ = _run_chunked_into(cfg, params, caches, prompt, chunk=16)
+        scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+        err = float(jnp.max(jnp.abs(logits[0] - ref_logits[0]))) / scale
+        assert err < 5e-3, f"{arch_id} pallas_interpret: rel={err:.2e}"

@@ -1,6 +1,5 @@
 """Unit tests for the SmartConf control law (paper §5)."""
 
-import math
 
 import numpy as np
 import pytest

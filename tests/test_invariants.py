@@ -1,7 +1,6 @@
 """Hypothesis property tests on system invariants: ring KV caches, the KV
 block pool ledger, and the prefetch queue accounting."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,6 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, reduced
-from repro.models import blocks as B
 from repro.serve.kv_cache import KVBlockPool
 
 

@@ -91,6 +91,57 @@ def test_rglru_sweep(rng, b, s, f):
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_rwkv6_state_op_threads_across_boundary(rng, impl):
+    """Splitting a sequence and threading (y, S) through the state-in/
+    state-out variant must reproduce the unsplit run — the scan-state ABI
+    chunked prefill relies on."""
+    from repro.kernels.rwkv6 import rwkv6_ref, rwkv6_state_op
+
+    bh, s, n = 4, 64, 64
+    r = jnp.asarray(rng.standard_normal((bh, s, n)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, n)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, n)) * 0.5, jnp.float32)
+    logw = jnp.asarray(-np.exp(rng.standard_normal((bh, s, n)) - 1.0),
+                       jnp.float32)
+    u = jnp.asarray(rng.standard_normal((bh, n)) * 0.3, jnp.float32)
+    full = rwkv6_ref(r, k, v, logw, u)
+
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    cut = 32
+    y1, s1 = rwkv6_state_op(r[:, :cut], k[:, :cut], v[:, :cut],
+                            logw[:, :cut], u, s0, force=impl)
+    y2, s2 = rwkv6_state_op(r[:, cut:], k[:, cut:], v[:, cut:],
+                            logw[:, cut:], u, s1, force=impl)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+    # the carried state is itself part of the ABI: it must equal the
+    # one-shot run's final state
+    _, s_full = rwkv6_state_op(r, k, v, logw, u, s0, force="xla")
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_rglru_state_op_threads_across_boundary(rng, impl):
+    from repro.kernels.rglru import rglru_ref, rglru_state_op
+
+    b, s, f = 2, 128, 256
+    la = jnp.asarray(-np.abs(rng.standard_normal((b, s, f))) * 0.5,
+                     jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, f)), jnp.float32)
+    full = rglru_ref(la, bb)
+
+    h0 = jnp.zeros((b, f), jnp.float32)
+    cut = 64
+    h1, st1 = rglru_state_op(la[:, :cut], bb[:, :cut], h0, force=impl)
+    h2, st2 = rglru_state_op(la[:, cut:], bb[:, cut:], st1, force=impl)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], axis=1)),
+                               np.asarray(full), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(full[:, -1]),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_model_chunked_rwkv6_matches_naive(rng):
     """models.rwkv6.time_mix_chunked (the XLA path) against the per-token
     oracle — the same math the Pallas kernel implements."""

@@ -126,10 +126,23 @@ def test_chunked_prefill_matches_one_shot(arch_id, chunk, rng):
 
 
 def test_chunked_prefill_gates_unsupported():
-    for arch_id in ("rwkv6-7b", "recurrentgemma-9b", "deepseek-moe-16b",
-                    "whisper-tiny", "internvl2-1b"):
+    # universal chunked prefill: only the modality frontends stay one-shot
+    for arch_id in ("whisper-tiny", "internvl2-1b"):
         assert not transformer.supports_chunked_prefill(
             reduced(get_config(arch_id))), arch_id
+    # recurrent / hybrid / MoE families joined the fast path
+    for arch_id in ("rwkv6-7b", "recurrentgemma-9b", "deepseek-moe-16b",
+                    "llama4-maverick-400b-a17b"):
+        assert transformer.supports_chunked_prefill(
+            reduced(get_config(arch_id))), arch_id
+    # paged KV needs attention-only blocks: MoE yes, recurrent no
+    for arch_id, expect in (("deepseek-moe-16b", True),
+                            ("llama4-maverick-400b-a17b", True),
+                            ("rwkv6-7b", False),
+                            ("recurrentgemma-9b", False),
+                            ("whisper-tiny", False)):
+        assert transformer.supports_paged_kv(
+            reduced(get_config(arch_id))) is expect, arch_id
 
 
 def test_moe_matches_reference(rng):

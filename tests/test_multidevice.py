@@ -6,7 +6,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 _SCRIPT = r"""
 import os
@@ -68,9 +67,9 @@ def sp_decode(q, k, v, kpos, qpos):
     s = jnp.where(valid[:, None, :], s, -1e30)
     m = jnp.max(s, axis=-1)
     p = jnp.where(valid[:, None, :], jnp.exp(s - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
+    lsum = jnp.sum(p, axis=-1)
     o = jnp.einsum("bhs,bhsd->bhd", p, vv)
-    return sp_decode_combine(o, m, l, "model")
+    return sp_decode_combine(o, m, lsum, "model")
 
 got = jax.jit(shard_map(
     sp_decode, mesh=mesh2,

@@ -6,7 +6,6 @@ import os
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -72,7 +71,8 @@ def test_allocator_failure_keeps_accountant_consistent(small_model):
     cfg, _ = small_model
     acc = HBMAccountant()
     pool = _alloc(cfg, capacity=4, bps=4, accountant=acc)
-    store_bytes = lambda: acc.breakdown().get("kv_cache", 0)
+    def store_bytes():
+        return acc.breakdown().get("kv_cache", 0)
     assert store_bytes() == 4 * pool.block_bytes
     assert pool.ensure(1, 48)                    # 3 of 4 blocks
     assert store_bytes() == 4 * pool.block_bytes
@@ -257,7 +257,11 @@ def test_bench_serving_smoke():
     assert {"serving_prefill_legacy", "serving_prefill_bucketed",
             "serving_decode_paged", "serving_decode_dense",
             "serving_kv_budget_cut_paged",
-            "serving_kv_budget_cut_dense"} <= names
+            "serving_kv_budget_cut_dense",
+            # universal chunked prefill: one recurrent + one MoE arch run
+            # legacy-vs-bucketed (token-identity asserted inside the bench)
+            "serving_arch_rwkv6_compile_reduction",
+            "serving_arch_deepseek_compile_reduction"} <= names
     cut = {r.split(",")[0]: r for r in rows}
     paged_freed = int(cut["serving_kv_budget_cut_paged"]
                       .split("freed=")[1].split()[0])

@@ -4,7 +4,6 @@ defaults break (paper §6.2), across seeds."""
 import collections
 import warnings
 
-import numpy as np
 import pytest
 
 from repro.core import fit_model

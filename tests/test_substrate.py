@@ -2,7 +2,6 @@
 
 import os
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,8 @@ def test_adamw_minimizes_quadratic():
     state = adamw.init(params)
     cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
                             total_steps=200, clip_norm=100.0)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, state, _ = adamw.update(g, state, params, cfg)
