@@ -1,29 +1,41 @@
-"""Serving hot-path benchmark: bucketed/chunked prefill vs. per-length
-compile, and paged vs. dense KV residency, on a mixed-prompt-length workload.
+"""Serving hot-path benchmark: token-packed vs bucketed vs per-length
+prefill, and paged vs. dense KV residency, on a mixed-prompt-length workload.
 
 This is the serving-perf trajectory entry (ROADMAP): the workload substrate
-the SmartConf serve controllers are evaluated against.  Rows report:
+the SmartConf serve controllers are evaluated against.  The prefill sweep
+runs with ``serve.prefill_chunk_tokens`` actuated at ``PREFILL_KNOB`` — the
+regime the knob exists for — so the three modes expose exactly the deputy
+question: legacy ignores the knob (one-shot), bucketed quantizes it
+(``bucket x n_slots`` true cost), packed spends it literally (one ragged
+stream per tick, chunks from many requests back-to-back).  Rows report:
 
-  * prefill jit-compile count (the bucketed path compiles one program per
-    power-of-two bucket; the legacy path one per distinct prompt length),
+  * prefill jit-compile count (packed: one stream shape in steady state;
+    bucketed: one program per power-of-two bucket; legacy: one per distinct
+    prompt length),
+  * ``pad_fraction`` — dead padding per issued prefill token; asserted to
+    DROP under packing, and (full run) to sit under 5% on the mixed
+    workload,
+  * TTFT p50/p99 across requests (expect packed <= bucketed on mixed
+    lengths: no cross-slot bucket padding),
   * decode throughput (tokens/s over steady-state decode ticks) for the
     paged block-table cache vs. the dense per-slot cache,
-  * TTFT p50/p99 across requests,
   * the ``serve.kv_block_budget`` actuation check: cutting the budget on a
     paged engine must drop ``hbm_bytes`` (the physical block store shrinks,
     preempting sequences), while on a dense engine the same cut only moves
     the logical ledger,
-  * mixed-arch rows (``serving_arch_*``): the same legacy-vs-bucketed
-    comparison for the families universal chunked prefill newly unlocked —
-    a recurrent arch (rwkv6), a hybrid recurrent/attention arch
-    (recurrentgemma), and a MoE arch (deepseek) — each asserted
-    token-identical between the two paths.
+  * mixed-arch rows (``serving_arch_*``): the same mode sweep for the
+    families universal chunked prefill unlocked — a recurrent arch (rwkv6),
+    a hybrid recurrent/attention arch (recurrentgemma), and a MoE arch
+    (deepseek) — each asserted token-identical across every mode.
 
-Reduced config on CPU — the *ratios* (compile count, relative tokens/s,
-hbm deltas) are the reproducible signal, not absolute microseconds.
+Reduced config on CPU — the *ratios* (compile count, pad fraction, relative
+tokens/s, hbm deltas) are the reproducible signal, not absolute
+microseconds.
 
 ``--smoke`` (or ``run(smoke=True)``) runs a tiny instance of every section
-so CI can keep the benchmark from rotting (see tests/test_paging.py).
+so CI can keep the benchmark from rotting (see tests/test_paging.py);
+``--prefill-mode`` restricts the sweep to one engine mode vs the legacy
+oracle.
 """
 
 from __future__ import annotations
@@ -38,6 +50,11 @@ N_REQUESTS = 24
 MAX_NEW = 8
 MAX_BATCH = 4
 CACHE_LEN = 128
+# the actuated serve.prefill_chunk_tokens for the prefill-mode sweep: small
+# enough that long prompts span several ticks (chunked serving's raison
+# d'etre) and that packed streams stay saturated by the workload
+PREFILL_KNOB = 16
+SWEEP_MAX_NEW = 4
 
 SMOKE_N_REQUESTS = 5
 SMOKE_MAX_BATCH = 2
@@ -58,17 +75,22 @@ def _workload(vocab: int, n_requests: int, seed: int = 7):
 
 
 def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
-                cache_len: int, max_new: int = MAX_NEW):
+                cache_len: int, max_new: int = MAX_NEW,
+                prefill_chunk: int | None = None):
     from repro.serve import Request, ServeEngine
 
     eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
                       enable_smartconf=False, prefill_mode=mode)
+    if prefill_chunk is not None and mode != "legacy":
+        eng.prefill_chunk = prefill_chunk     # actuate the soft knob
     for i, p in enumerate(prompts):
         eng.submit(Request(i, p, max_new))
     t0 = time.perf_counter()
     ticks = 0
+    max_segments = 0
     while len(eng.finished) < len(prompts) and ticks < 4000:
-        eng.tick()
+        stats = eng.tick()
+        max_segments = max(max_segments, stats["packed_segments"])
         ticks += 1
     wall = time.perf_counter() - t0
     assert len(eng.finished) == len(prompts), f"{mode}: incomplete"
@@ -78,6 +100,8 @@ def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
         "wall_s": wall,
         "prefill_compiles": eng.prefill_compiles,
         "prefill_calls": eng.prefill_calls,
+        "pad_fraction": eng.pad_fraction,
+        "max_segments": max_segments,
         "ttft_p50": ttfts[len(ttfts) // 2],
         "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
         "generated": {r.req_id: list(r.generated) for r in eng.finished},
@@ -139,7 +163,15 @@ def _budget_cut(cfg, params, kv_mode: str, *, max_batch: int, cache_len: int):
     return hbm0, hbm1, preempted
 
 
-def run(smoke: bool = False) -> list[str]:
+def _sweep_modes(prefill_mode: str | None) -> list[str]:
+    if prefill_mode in (None, "auto"):
+        return ["legacy", "bucketed", "packed"]
+    if prefill_mode == "one_shot":
+        return ["legacy"]
+    return ["legacy", prefill_mode]
+
+
+def run(smoke: bool = False, prefill_mode: str | None = None) -> list[str]:
     import jax
     from repro.configs import get_config
     from repro.configs.base import reduced
@@ -148,8 +180,8 @@ def run(smoke: bool = False) -> list[str]:
     n_requests = SMOKE_N_REQUESTS if smoke else N_REQUESTS
     max_batch = SMOKE_MAX_BATCH if smoke else MAX_BATCH
     cache_len = SMOKE_CACHE_LEN if smoke else CACHE_LEN
-    max_new = 4 if smoke else MAX_NEW
     decode_ticks = SMOKE_DECODE_TICKS if smoke else 60
+    modes = _sweep_modes(prefill_mode)
 
     cfg = reduced(get_config("yi-6b"))
     params, _ = zoo.init(cfg, jax.random.key(0))
@@ -158,26 +190,52 @@ def run(smoke: bool = False) -> list[str]:
 
     rows = []
     res = {m: _run_engine(cfg, params, prompts, m, max_batch=max_batch,
-                          cache_len=cache_len, max_new=max_new)
-           for m in ("legacy", "bucketed")}
-    # the bucketed engine serves from the paged KV cache (kv_mode auto),
-    # the legacy engine from the dense per-slot cache: identical tokens is
-    # the end-to-end paged/dense parity check
-    assert res["legacy"]["generated"] == res["bucketed"]["generated"], \
-        "paged (bucketed) and dense (legacy) engines disagree on tokens"
+                          cache_len=cache_len, max_new=SWEEP_MAX_NEW,
+                          prefill_chunk=PREFILL_KNOB)
+           for m in modes}
+    # the fused engines serve from the paged KV cache (kv_mode auto), the
+    # legacy engine from the dense per-slot cache: identical tokens is the
+    # end-to-end paged/dense parity check — and, for packed, the
+    # token-identity bar against the one-shot oracle
+    for m in modes[1:]:
+        assert res["legacy"]["generated"] == res[m]["generated"], \
+            f"{m} engine disagrees with the one-shot oracle on tokens"
     for mode, r in res.items():
         rows.append(fmt_row(
             f"serving_prefill_{mode}", r["wall_s"] / r["ticks"] * 1e6,
             f"compiles={r['prefill_compiles']} calls={r['prefill_calls']} "
+            f"pad_fraction={r['pad_fraction']:.3f} "
             f"distinct_lengths={n_lengths}"))
         rows.append(fmt_row(
             f"serving_ttft_{mode}", r["ttft_p50"] * 1e6,
             f"p50_ms={r['ttft_p50']*1e3:.1f} p99_ms={r['ttft_p99']*1e3:.1f}"))
-    ratio = res["legacy"]["prefill_compiles"] / max(
-        1, res["bucketed"]["prefill_compiles"])
-    rows.append(fmt_row(
-        "serving_compile_reduction", 0.0,
-        f"legacy/bucketed={ratio:.1f}x (goal >=2x)"))
+    if "bucketed" in res:
+        ratio = res["legacy"]["prefill_compiles"] / max(
+            1, res["bucketed"]["prefill_compiles"])
+        rows.append(fmt_row(
+            "serving_compile_reduction", 0.0,
+            f"legacy/bucketed={ratio:.1f}x (goal >=2x)"))
+    if "packed" in res and "bucketed" in res:
+        b, p = res["bucketed"], res["packed"]
+        # deterministic scheduling facts, asserted so CI pins them: packing
+        # may never pad more, compile more, or attend fewer requests per
+        # call than the bucketed path it replaces
+        assert p["prefill_compiles"] <= b["prefill_compiles"], \
+            (p["prefill_compiles"], b["prefill_compiles"])
+        assert p["pad_fraction"] < b["pad_fraction"], \
+            f"packed pad {p['pad_fraction']:.3f} >= " \
+            f"bucketed {b['pad_fraction']:.3f}"
+        if not smoke:
+            assert p["pad_fraction"] < 0.05, \
+                f"packed pad_fraction {p['pad_fraction']:.3f} >= 5%"
+        rows.append(fmt_row(
+            "serving_packed_vs_bucketed", 0.0,
+            f"ttft_p50_bucketed/packed="
+            f"{b['ttft_p50'] / max(p['ttft_p50'], 1e-9):.2f}x "
+            f"pad_bucketed={b['pad_fraction']:.3f} "
+            f"pad_packed={p['pad_fraction']:.3f} "
+            f"compiles={b['prefill_compiles']}/{p['prefill_compiles']} "
+            f"max_segments_per_call={p['max_segments']}"))
 
     tok_s = {m: _decode_throughput(cfg, params, m, max_batch=max_batch,
                                    cache_len=cache_len, n_ticks=decode_ticks)
@@ -215,24 +273,28 @@ def run(smoke: bool = False) -> list[str]:
         aprompts = _workload(acfg.vocab_size, n_requests)
         ares = {m: _run_engine(acfg, aparams, aprompts, m,
                                max_batch=max_batch, cache_len=cache_len,
-                               max_new=max_new)
-                for m in ("legacy", "bucketed")}
-        assert ares["legacy"]["generated"] == ares["bucketed"]["generated"], \
-            f"{arch}: bucketed chunked prefill diverged from one-shot"
+                               max_new=SWEEP_MAX_NEW,
+                               prefill_chunk=PREFILL_KNOB)
+                for m in modes}
+        for m in modes[1:]:
+            assert ares["legacy"]["generated"] == ares[m]["generated"], \
+                f"{arch}: {m} chunked prefill diverged from one-shot"
         short = arch.split("-")[0]
         for mode, r in ares.items():
             rows.append(fmt_row(
                 f"serving_arch_{short}_{mode}",
                 r["wall_s"] / r["ticks"] * 1e6,
                 f"compiles={r['prefill_compiles']} "
+                f"pad_fraction={r['pad_fraction']:.3f} "
                 f"ttft_p50_ms={r['ttft_p50']*1e3:.1f} "
                 f"ttft_p99_ms={r['ttft_p99']*1e3:.1f}"))
-        rows.append(fmt_row(
-            f"serving_arch_{short}_compile_reduction", 0.0,
-            f"legacy/bucketed="
-            f"{ares['legacy']['prefill_compiles'] / max(1, ares['bucketed']['prefill_compiles']):.1f}x "
-            f"ttft_p50_legacy/bucketed="
-            f"{ares['legacy']['ttft_p50'] / max(ares['bucketed']['ttft_p50'], 1e-9):.2f}x"))
+        if "bucketed" in ares:
+            rows.append(fmt_row(
+                f"serving_arch_{short}_compile_reduction", 0.0,
+                f"legacy/bucketed="
+                f"{ares['legacy']['prefill_compiles'] / max(1, ares['bucketed']['prefill_compiles']):.1f}x "
+                f"ttft_p50_legacy/bucketed="
+                f"{ares['legacy']['ttft_p50'] / max(ares['bucketed']['ttft_p50'], 1e-9):.2f}x"))
     return rows
 
 

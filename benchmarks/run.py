@@ -50,6 +50,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="section names to run (default: all)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny instance of each section that supports it")
+    ap.add_argument("--prefill-mode", default=None,
+                    choices=["auto", "bucketed", "packed", "one_shot"],
+                    help="restrict serving sections to one engine prefill "
+                         "mode (vs the built-in legacy oracle) instead of "
+                         "the full mode sweep")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON list to PATH")
     args = ap.parse_args(argv)
@@ -59,9 +64,12 @@ def main(argv: list[str] | None = None) -> None:
     print("name,us_per_call,derived")
     for name in picked:
         mod = sections[name]
+        params = inspect.signature(mod.run).parameters
         kwargs = {}
-        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+        if args.smoke and "smoke" in params:
             kwargs["smoke"] = True
+        if args.prefill_mode and "prefill_mode" in params:
+            kwargs["prefill_mode"] = args.prefill_mode
         for row in mod.run(**kwargs):
             rows.append(row)
             print(row, flush=True)

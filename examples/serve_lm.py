@@ -47,8 +47,7 @@ print(f"\nfinished {len(eng.finished)}/16 in {tick} ticks; "
       f"peak {eng.accountant.peak_bytes/1e6:.1f}MB of {budget/1e6:.1f}MB")
 print(f"mean TTFT {eng.ttft.mean()*1e3:.1f}ms; "
       f"decode p99 {eng.decode_latency.p99()*1e3:.1f}ms")
-mode = "bucketed" if eng.fused_prefill else "legacy"
-print(f"prefill[{mode}]: {eng.prefill_calls} calls, "
+print(f"prefill[{eng.prefill_impl}]: {eng.prefill_calls} calls, "
       f"{eng.prefill_compiles} compiled programs for "
       f"{len({len(r.prompt) for r in eng.finished})} distinct prompt lengths")
 assert eng.accountant.violations == 0

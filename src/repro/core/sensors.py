@@ -8,6 +8,7 @@ can be polled at every control interval.
 from __future__ import annotations
 
 import collections
+import contextlib
 import threading
 import time
 from typing import Deque
@@ -90,15 +91,29 @@ class HBMAccountant:
 
 
 class LatencySensor:
-    """Sliding-window latency sensor with mean / p50 / p99."""
+    """Sliding-window latency sensor with mean / p50 / p99.
 
-    def __init__(self, window: int = 512) -> None:
+    ``clock`` is injectable (like :class:`ThroughputSensor`) so latency
+    tests drive a fake clock deterministically instead of sleeping; it is
+    consulted by :meth:`measure`, the span-timing helper."""
+
+    def __init__(self, window: int = 512, clock=time.monotonic) -> None:
         self._buf: Deque[float] = collections.deque(maxlen=window)
+        self._clock = clock
         self._lock = threading.Lock()
 
     def record(self, seconds: float) -> None:
         with self._lock:
             self._buf.append(float(seconds))
+
+    @contextlib.contextmanager
+    def measure(self):
+        """Context manager recording the span's duration via the clock."""
+        t0 = self._clock()
+        try:
+            yield
+        finally:
+            self.record(self._clock() - t0)
 
     def _snapshot(self) -> list[float]:
         with self._lock:

@@ -27,10 +27,14 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--budget-headroom-mb", type=float, default=2.0)
     ap.add_argument("--prefill-mode", default="auto",
-                    choices=["auto", "bucketed", "legacy"],
-                    help="bucketed = padded power-of-two chunked prefill "
-                         "(compile-count O(log len)); legacy = exact "
-                         "one-shot per prompt length")
+                    choices=["auto", "bucketed", "packed", "one_shot"],
+                    help="packed = ONE token-packed ragged stream per tick "
+                         "(chunks from many requests share the call; the "
+                         "serve.prefill_chunk_tokens knob is the literal "
+                         "per-tick token budget); bucketed = padded "
+                         "power-of-two chunked prefill (compile-count "
+                         "O(log len)); one_shot = exact whole-prompt "
+                         "prefill per request (the legacy baseline)")
     ap.add_argument("--kv-mode", default="auto",
                     choices=["auto", "paged", "dense"],
                     help="paged = block-table KV cache + paged decode "
@@ -57,13 +61,13 @@ def main() -> None:
     while len(eng.finished) < args.requests and ticks < 2000:
         eng.tick()
         ticks += 1
-    mode = "bucketed" if eng.fused_prefill else "legacy"
     kv = "paged" if eng.paged else "dense"
     print(f"{cfg.name}: {len(eng.finished)}/{args.requests} done in {ticks} "
           f"ticks; HBM violations {eng.accountant.violations}; "
           f"peak {eng.accountant.peak_bytes/1e6:.1f}/{budget/1e6:.1f} MB; "
-          f"TTFT {eng.ttft.mean()*1e3:.0f}ms; prefill[{mode}] "
-          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles; "
+          f"TTFT {eng.ttft.mean()*1e3:.0f}ms; prefill[{eng.prefill_impl}] "
+          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles, "
+          f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
           f"{eng.preemptions} preemptions")
     eng.close()

@@ -111,16 +111,25 @@ def paged_cache_init(cfg, kind: str, num_blocks: int, block_tokens: int):
     }
 
 
-def _paged_scatter(cache, k, v, pos, valid, block_tables):
+def _paged_scatter(cache, k, v, pos, valid, block_tables, seg=None):
     """Write per-token K/V into the block store through the table.
 
     k, v: [B, C, Kv, D]; pos: [B, C] absolute logical positions; valid:
-    [B, C] bool (False rows/tokens are dropped).  Distinct logical positions
-    map to distinct (block, offset) pairs, so the scatter never collides."""
+    [B, C] bool (False rows/tokens are dropped).  The routing is fully
+    **per-token**: each token resolves its own table row — by default the
+    batch row it sits in, or, when ``seg`` ([B, C] int32 slot ids, -1 =
+    dead) is given, the slot it *belongs to* regardless of where it sits
+    in the stream (the packed-prefill layout, where one [1, P] stream
+    carries chunks from many requests).  Distinct logical positions map to
+    distinct (block, offset) pairs, so the scatter never collides."""
     n, _, t, _ = cache["k"].shape
-    m = block_tables.shape[1]
+    b, m = block_tables.shape
     blk = jnp.clip(pos // t, 0, m - 1)
-    entry = jnp.take_along_axis(block_tables, blk, axis=1)       # [B, C]
+    if seg is None:
+        entry = jnp.take_along_axis(block_tables, blk, axis=1)   # [B, C]
+    else:
+        entry = block_tables[jnp.clip(seg, 0, b - 1), blk]       # [*, C]
+        valid = valid & (seg >= 0)
     phys = jnp.where(valid & (entry >= 0), entry, n)             # n => drop
     off = (pos % t).astype(jnp.int32)
     return {
@@ -343,6 +352,142 @@ def block_apply_chunk(cfg, kind: str, params: dict, x: jax.Array,
             }
     else:
         raise ValueError(f"chunked prefill cannot serve block kind {kind!r}")
+
+    h2 = apply_norm(cfg.norm, params["ln2"], x)
+    if is_moe:
+        y = moe_lib.moe_apply_ep(params["moe"], h2, cfg, valid=valid)
+    else:
+        y = layers.mlp(params["mlp"], h2, cfg.mlp)
+    x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# apply: token-packed ragged stream (packed prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_packed(cfg, kind: str, params: dict, x: jax.Array,
+                       pos: jax.Array, slot_id: jax.Array, start: jax.Array,
+                       seg_len: jax.Array, cache: dict,
+                       block_tables: jax.Array | None = None):
+    """One block over a token-packed ragged prefill stream.
+
+    x: [1,P,d] — ONE flat stream holding contiguous chunks from up to B
+    different requests (a new request's first chunk rides next to another
+    request's later chunk); pos: [P] absolute position of each token in its
+    own request; slot_id: [P] owning slot (-1 = dead pad, fully inert);
+    start/seg_len: [B] per-slot chunk start and token count this call
+    (the cu_seqlens twins: segment s spans stream indices
+    ``[sum(seg_len[<s in stream order]), ...)``, but carrying them per-token
+    keeps every mask O(1) to derive).  cache: the *batched* per-slot cache
+    tree ([B, ...] leaves) or the paged block store.
+
+    Attention kinds stay truly packed: queries attend through
+    :func:`~repro.models.layers.segment_attention` against the flattened
+    all-slot history view ++ in-stream keys, masked by segment id so no
+    token ever sees another request; K/V write-back routes **per token** to
+    its slot's dense ring row or paged block (``_paged_scatter`` with
+    ``seg=slot_id``).
+
+    Recurrent kinds (rwkv6/rglru) carry per-slot scan state with no
+    position plane, so the stream is scattered to the per-slot left-aligned
+    chunk layout, advanced through the existing scan-state ABI
+    (:func:`block_apply_chunk`: pad neutralization, fresh-segment reset at
+    position 0, MoE valid-aware capacity), and the outputs gathered back to
+    their stream positions — segment-exact at B x P cost, which only the
+    O(1)-state families pay."""
+    base, is_moe = split_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+    p_len = x.shape[1]
+    nslots = start.shape[0]
+    valid = (slot_id >= 0)[None, :]                              # [1,P]
+
+    if base in ("rwkv6", "rglru"):
+        row = jnp.where(slot_id >= 0, slot_id, nslots)           # B => drop
+        off = jnp.clip(pos - start[jnp.clip(slot_id, 0, nslots - 1)],
+                       0, p_len - 1)
+        xs = jnp.zeros((nslots, p_len, x.shape[2]), x.dtype)
+        xs = xs.at[row, off].set(x[0], mode="drop")
+        row_valid = (jnp.arange(p_len, dtype=jnp.int32)[None, :]
+                     < seg_len[:, None])
+        row_pos = start[:, None] + jnp.arange(p_len, dtype=jnp.int32)[None, :]
+        y, new_cache, aux = block_apply_chunk(cfg, kind, params, xs, row_pos,
+                                              row_valid, cache)
+        xg = y[jnp.clip(slot_id, 0, nslots - 1), off][None]      # [1,P,d]
+        return jnp.where(valid[..., None], xg, x), new_cache, aux
+
+    if base not in ATTN_KINDS:
+        raise ValueError(f"packed prefill cannot serve block kind {kind!r}")
+
+    theta = _theta(cfg, base)
+    h = apply_norm(cfg.norm, params["ln1"], x)
+    pos2 = pos[None, :]                                          # [1,P]
+    q = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"]),
+                    pos2, theta)
+    k = layers.rope(jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"]),
+                    pos2, theta)
+    v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
+    window = cfg.window if base in ("swa", "local") else 0
+    q_seg = slot_id[None, :]                                     # [1,P]
+
+    if block_tables is not None:
+        # write-then-gather (exact: segments prefill front-to-back, so every
+        # position <= q_pos of the same segment is live in the store); the
+        # in-stream keys are therefore already inside the gathered view
+        new_cache = _paged_scatter(cache, k, v, pos2, valid, block_tables,
+                                   seg=q_seg)
+        k_view, v_view, kpos_view = _paged_view(new_cache, block_tables)
+        b, mt = kpos_view.shape
+        kvh, hd = k_view.shape[2], k_view.shape[3]
+        k_eff = k_view.reshape(1, b * mt, kvh, hd)
+        v_eff = v_view.reshape(1, b * mt, kvh, hd)
+        kpos_eff = kpos_view.reshape(1, b * mt)
+        kseg_eff = jnp.repeat(jnp.arange(b, dtype=jnp.int32), mt)[None, :]
+        o = layers.segment_attention(q, k_eff, v_eff, q_pos=pos2,
+                                     k_pos=kpos_eff, q_seg=q_seg,
+                                     k_seg=kseg_eff, window=window)
+        x = x + layers.attn_output(params["attn"], o)
+    else:
+        b, n = cache["k"].shape[0], cache["k"].shape[1]
+        kvh, hd = cache["k"].shape[2], cache["k"].shape[3]
+        # every slot's history, flattened to one key axis; entries at/after a
+        # slot's chunk start are stale (a freed slot's previous occupant)
+        kpos_cache = jnp.where(cache["pos"] < start[:, None],
+                               cache["pos"], -1)
+        k_eff = jnp.concatenate(
+            [cache["k"].reshape(1, b * n, kvh, hd),
+             k.astype(cache["k"].dtype)], axis=1)
+        v_eff = jnp.concatenate(
+            [cache["v"].reshape(1, b * n, kvh, hd),
+             v.astype(cache["v"].dtype)], axis=1)
+        kpos_eff = jnp.concatenate(
+            [kpos_cache.reshape(1, b * n),
+             jnp.where(valid, pos2, -1).astype(jnp.int32)], axis=1)
+        kseg_eff = jnp.concatenate(
+            [jnp.repeat(jnp.arange(b, dtype=jnp.int32), n)[None, :],
+             q_seg], axis=1)
+        o = layers.segment_attention(q, k_eff, v_eff, q_pos=pos2,
+                                     k_pos=kpos_eff, q_seg=q_seg,
+                                     k_seg=kseg_eff, window=window)
+        x = x + layers.attn_output(params["attn"], o)
+
+        # per-token write-back into each token's OWN slot row; ring
+        # semantics per segment: keep only the last min(seg_len, n) valid
+        # positions so a ring slot is written at most once per call
+        last_pos = start + seg_len - 1                           # [B]
+        keep = (slot_id >= 0) & (
+            pos > (last_pos[jnp.clip(slot_id, 0, b - 1)] - n))
+        rows = jnp.where(keep, slot_id, b)                       # b => drop
+        cols = (pos % n).astype(jnp.int32)
+        new_cache = {
+            "k": cache["k"].at[rows, cols].set(
+                k[0].astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[rows, cols].set(
+                v[0].astype(cache["v"].dtype), mode="drop"),
+            "pos": cache["pos"].at[rows, cols].set(
+                pos.astype(jnp.int32), mode="drop"),
+        }
 
     h2 = apply_norm(cfg.norm, params["ln2"], x)
     if is_moe:

@@ -240,6 +240,34 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return _grouped_out(p, v)
 
 
+def segment_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      q_seg: jax.Array, k_seg: jax.Array,
+                      window: int = 0) -> jax.Array:
+    """Token-packed ragged attention (packed prefill).
+
+    One flat stream carries chunks from *different* requests; every query
+    and key names its owning segment, and a key is visible iff it belongs
+    to the **same segment** (no cross-request attention), has been written
+    (``k_pos >= 0``), is causal (``k_pos <= q_pos``), and sits inside the
+    sliding window.  q [B,P,H,D]; k,v [B,N,Kv,D]; q_pos/q_seg [B,P];
+    k_pos/k_seg [B,N] (segment id < 0 = dead pad: fully masked).
+
+    The unmasked (segment, position) pairs are exactly the pairs the
+    per-slot :func:`chunk_attention` path exposes, so packed and bucketed
+    prefill agree up to summation order."""
+    scale = q.shape[-1] ** -0.5
+    s = _grouped_scores(q * scale, k).astype(jnp.float32)     # [B,H,P,N]
+    ok = (k_seg[:, None, :] == q_seg[:, :, None]) & (q_seg[:, :, None] >= 0)
+    ok &= k_pos[:, None, :] >= 0
+    ok &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(ok[:, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return _grouped_out(p, v)
+
+
 def attn_project_q(params, x, *, positions, theta):
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     return rope(q, positions, theta)

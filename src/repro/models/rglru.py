@@ -101,7 +101,12 @@ def rglru_chunk(params, x, state, valid):
     and gated input 0 — so h passes through them unchanged; the conv carry
     advances to each row's last W-1 *valid* inputs.  Dispatches the
     recurrence through ``kernels.rglru.rglru_state_op`` (ref / Pallas).
-    Returns (y [B,C,d], state')."""
+    Returns (y [B,C,d], state').
+
+    This row-wise layout is also the segment layout of token-packed prefill:
+    ``blocks.block_apply_packed`` scatters each packed segment to its slot's
+    row (left-aligned, ``valid`` marking real tokens) before calling here,
+    so one chunk ABI serves both the bucketed and the packed scheduler."""
     from repro.kernels.rglru import rglru_state_op
 
     b, c, _ = x.shape

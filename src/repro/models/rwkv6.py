@@ -179,7 +179,12 @@ def time_mix_chunk(params, x, state, x_last, valid):
     outputs at pad positions are garbage (callers mask by position).  Rows
     with no valid tokens keep (S, x_last) untouched.  Dispatches the
     recurrence through ``kernels.rwkv6.rwkv6_state_op`` (ref / Pallas).
-    Returns (y [B,C,d], state' [B,H,N,N], x_last' [B,d])."""
+    Returns (y [B,C,d], state' [B,H,N,N], x_last' [B,d]).
+
+    This row-wise layout is also the segment layout of token-packed prefill:
+    ``blocks.block_apply_packed`` scatters each packed segment to its slot's
+    row (left-aligned, ``valid`` marking real tokens) before calling here,
+    so one chunk ABI serves both the bucketed and the packed scheduler."""
     from repro.kernels.rwkv6 import rwkv6_state_op
 
     b, c, d = x.shape

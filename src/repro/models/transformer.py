@@ -503,6 +503,73 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths,
     return logits, caches
 
 
+def prefill_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
+                   block_tables=None):
+    """Advance prefill by ONE token-packed ragged stream, in place.
+
+    tokens: [1,P] int32 — a single flat stream packing contiguous chunks
+    from up to B requests back-to-back (no per-slot padding: a new
+    request's first chunk rides in the same call as another request's later
+    chunk); slot_id: [P] owning slot per token (-1 = dead pad); pos: [P]
+    absolute position of each token within its own request; start/seg_len:
+    [B] per-slot chunk start and token count this call (the segment
+    boundaries, cu_seqlens-style).  ``block_tables`` ([B,M] int32,
+    optional) routes attention K/V through the paged block store with a
+    per-token scatter.  Returns (next-token logits [B,V] at each slot's
+    last packed token — garbage for slots with no tokens this call — and
+    the updated caches).
+
+    Attention masks by segment id (:func:`~repro.models.layers
+    .segment_attention`), so no token attends across requests; recurrent
+    blocks scatter the stream to the per-slot chunk layout and thread scan
+    state through the state-in/state-out kernels; MoE routes with the
+    packed ``valid`` mask.  Calling this repeatedly over a workload is
+    exact chunked prefill for every supported family, with a jit cache of
+    O(1) entries (one packed shape) instead of one per padded bucket."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
+                         "does not support packed prefill")
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    x = params["embed"][tokens]
+
+    for j, kind in enumerate(prefix):
+        x, caches["prefix"][j], _ = B.block_apply_packed(
+            cfg, kind, params["prefix"][j], x, pos, slot_id, start, seg_len,
+            caches["prefix"][j], block_tables=block_tables)
+
+    if n_groups:
+        def group_body(x, xs):
+            gp, gc = xs
+            new_c = []
+            for j, kind in enumerate(pattern):
+                x, cj, _ = B.block_apply_packed(cfg, kind, gp[j], x, pos,
+                                                slot_id, start, seg_len,
+                                                gc[j],
+                                                block_tables=block_tables)
+                new_c.append(cj)
+            return x, new_c
+
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], caches["groups"]))
+        caches["groups"] = new_groups
+
+    for j, kind in enumerate(rem):
+        x, caches["rem"][j], _ = B.block_apply_packed(
+            cfg, kind, params["rem"][j], x, pos, slot_id, start, seg_len,
+            caches["rem"][j], block_tables=block_tables)
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    nslots = start.shape[0]
+    t_idx = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    last_idx = jnp.max(
+        jnp.where(slot_id[None, :]
+                  == jnp.arange(nslots, dtype=jnp.int32)[:, None],
+                  t_idx[None, :], -1), axis=1)                   # [B]
+    xl = x[0, jnp.clip(last_idx, 0)][:, None, :]                 # [B,1,d]
+    logits = _logits(cfg, params, xl)[:, 0]
+    return logits, caches
+
+
 def decode_step(cfg, params, caches, token, pos, active=None,
                 block_tables=None):
     """token: [B] int32; pos: [B] absolute position.  ``active`` ([B] bool,

@@ -16,15 +16,36 @@ prefills (HB2149-style trade-off) by capping how many prompt tokens one
 prefill call may process before decode runs again.
 
 Hot path (one `tick`):
-  admission -> scheduling (slot + KV allocation) -> ONE bucketed chunked
-  prefill call advancing every prefilling slot -> ONE fused decode step over
-  all running slots -> completion/free -> controller updates.
+  admission -> scheduling (slot + KV allocation) -> ONE prefill call (a
+  token-packed ragged stream, or a bucketed padded batch) advancing the
+  prefilling slots -> ONE fused decode step over all running slots ->
+  completion/free -> controller updates.
 
 Hot-path design (the serving-perf tentpole):
-  * **Length-bucketed prefill** — prompt chunks are padded to power-of-two
-    buckets and batched across slots into a single ``prefill_chunk`` call at
-    engine batch width, so the jit cache holds one entry per *bucket*
-    instead of one per distinct prompt length.
+  * **Token-packed continuous batching** (``prefill_mode="packed"``, the
+    default for every text arch) — each tick fills a single
+    ``[1, packed_width]`` ragged stream with chunks from as many requests
+    as fit under the ``serve.prefill_chunk_tokens`` budget, regardless of
+    their natural length buckets: a new request's first chunk rides in the
+    same call as another request's later chunk.  Per-token ``slot_id`` /
+    ``position`` arrays plus per-slot segment boundaries carry the ragged
+    structure; attention masks by segment id so no request sees another,
+    and K/V scatter routes each token to its slot's dense ring row or
+    paged block (``prefill_packed``).  The knob is therefore the *literal*
+    per-tick token budget (a tick's true cost is ``<= prefill_chunk``
+    tokens, not ``bucket x n_slots``), the jit cache shrinks to one packed
+    shape under saturated demand (drain-tail ticks bucket down, so worst
+    case O(log cache_len) vs the bucketed path's per-(bucket, slot-count)
+    spread), and ``pad_fraction`` — dead tokens in the issued stream — is
+    observable per tick, so the SmartConf deputy for the knob tracks the
+    work actually done.
+  * **Length-bucketed prefill** (``prefill_mode="bucketed"``) — prompt
+    chunks are padded to power-of-two buckets and batched across slots
+    into a single ``prefill_chunk`` call at engine batch width, so the jit
+    cache holds one entry per *bucket* instead of one per distinct prompt
+    length.  Kept as the comparison baseline: its per-tick token cost is
+    quantized to ``bucket x n_slots``, which is exactly the deputy drift
+    packing removes.
   * **Real chunked prefill** — at most ``prefill_chunk`` prompt tokens are
     prefilled per tick; long prompts spread over several ticks interleaved
     with decode, so the SmartConf soft knob actuates observable behavior.
@@ -52,20 +73,23 @@ KV residency (the paged-KV tentpole):
     with recurrent blocks (O(1) state, nothing to page) and the modality
     frontends keep the dense path (``kv_mode="auto"``).
 
-Universal chunked prefill: every text-only family serves the bucketed/
-chunked path — attention kinds via position masking, recurrent kinds
-(rwkv6/rglru) by threading scan state across chunk boundaries through the
-state-in/state-out kernel variants, and MoE via pad-aware router capacity —
-so ``serve.prefill_chunk_tokens`` actuates uniformly across the zoo.  Only
-the vision/encoder-decoder frontends (unpadded modality prefixes) keep the
-exact one-shot path under ``prefill_mode="auto"``, and that fallback warns
-loudly; requesting ``bucketed`` for them raises.
+Universal chunked prefill: every text-only family serves the packed (and
+bucketed) path — attention kinds via position/segment masking, recurrent
+kinds (rwkv6/rglru) by threading scan state across chunk boundaries through
+the state-in/state-out kernel variants, and MoE via pad-aware router
+capacity — so ``serve.prefill_chunk_tokens`` actuates uniformly across the
+zoo.  Only the vision/encoder-decoder frontends (unpadded modality
+prefixes) keep the exact one-shot path under ``prefill_mode="auto"``, and
+that fallback warns loudly; requesting ``packed`` or ``bucketed`` for them
+raises.  ``REPRO_PREFILL_MODE`` overrides what ``auto`` resolves to (the CI
+matrix leg), and ``one_shot`` is accepted as an alias for ``legacy``.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 import warnings
 from typing import Callable
@@ -141,23 +165,50 @@ class ServeEngine:
         self.cache_len = cache_len = padded_cache_len(cache_len)
         self.clock = clock
 
-        if prefill_mode not in ("auto", "bucketed", "legacy"):
+        if prefill_mode == "one_shot":          # CLI-facing alias
+            prefill_mode = "legacy"
+        env_forced = False
+        if prefill_mode == "auto":
+            # CI matrix toggle (like REPRO_*_IMPL): re-route what `auto`
+            # resolves to without touching explicit mode requests; a
+            # blanket toggle falls back (loudly) on archs that cannot serve
+            # it, where an explicit request raises
+            env = os.environ.get("REPRO_PREFILL_MODE", "").strip() or "auto"
+            env = "legacy" if env == "one_shot" else env
+            if env != "auto":
+                env_forced = True
+                prefill_mode = env
+        if prefill_mode not in ("auto", "packed", "bucketed", "legacy"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
-        if prefill_mode == "bucketed" and not zoo.supports_chunked_prefill(cfg):
-            raise ValueError(
-                f"{cfg.name}: {_one_shot_reason(cfg)} cannot serve bucketed "
-                "(chunked) prefill; only prefill_mode='legacy' (one-shot) "
-                "is available for this family")
-        self.fused_prefill = (prefill_mode == "bucketed" or (
-            prefill_mode == "auto" and zoo.supports_chunked_prefill(cfg)))
-        if prefill_mode == "auto" and not self.fused_prefill:
-            # every text-only family (attention, recurrent, MoE) serves the
-            # fast path now; falling back is exceptional, so say it loudly —
-            # the serve.prefill_chunk_tokens knob will NOT actuate here
-            warnings.warn(
-                f"{cfg.name}: {_one_shot_reason(cfg)} keeps the one-shot "
-                "legacy prefill path; serve.prefill_chunk_tokens will not "
-                "actuate for this engine", RuntimeWarning, stacklevel=2)
+        if (prefill_mode in ("packed", "bucketed")
+                and not zoo.supports_chunked_prefill(cfg)):
+            if not env_forced:
+                raise ValueError(
+                    f"{cfg.name}: {_one_shot_reason(cfg)} cannot serve "
+                    f"{prefill_mode} (chunked) prefill; only "
+                    "prefill_mode='legacy' (one-shot) is available for this "
+                    "family")
+            prefill_mode = "auto"
+        if prefill_mode == "auto":
+            if zoo.supports_chunked_prefill(cfg):
+                prefill_mode = "packed"
+            else:
+                # every text-only family (attention, recurrent, MoE) serves
+                # the fast path now; falling back is exceptional, so say it
+                # loudly — the serve.prefill_chunk_tokens knob will NOT
+                # actuate here
+                warnings.warn(
+                    f"{cfg.name}: {_one_shot_reason(cfg)} keeps the one-shot "
+                    "legacy prefill path; serve.prefill_chunk_tokens will "
+                    "not actuate for this engine", RuntimeWarning,
+                    stacklevel=2)
+                prefill_mode = "legacy"
+        self.prefill_impl = prefill_mode
+        self.fused_prefill = prefill_mode != "legacy"
+        # the packed stream's width cap: under saturated demand every tick
+        # issues this one shape; the live serve.prefill_chunk_tokens value
+        # caps how many real tokens ride in it each tick
+        self.packed_width = cache_len
 
         if kv_mode not in ("auto", "paged", "dense"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
@@ -206,6 +257,14 @@ class ServeEngine:
         self._free_slots = collections.deque(range(max_batch))
         self.prefill_calls = 0
         self._prefill_shapes: set[int] = set()
+        # prefill padding telemetry (the serve.prefill_chunk_tokens deputy):
+        # issued = token-positions the prefill calls computed, live = real
+        # prompt tokens among them; pad_fraction = 1 - live/issued
+        self.prefill_issued_tokens = 0
+        self.prefill_live_tokens = 0
+        self._tick_issued = 0
+        self._tick_live = 0
+        self._tick_packed_segments = 0
 
         # device-resident hot state (one fused batch across slots); the
         # host only keeps positions/counters, never token values
@@ -242,6 +301,17 @@ class ServeEngine:
                 first, mode="drop")
             return c, tok, gbuf
 
+        def prefill_packed_fn(p, c, tokens, slot_id, pos, start, seg_len,
+                              done, tok, gbuf, bt):
+            logits, c = zoo.prefill_packed(cfg, p, c, tokens, slot_id, pos,
+                                           start, seg_len, block_tables=bt)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(done, first, tok)
+            slot0 = jnp.where(done, 0, gbuf.shape[1])
+            gbuf = gbuf.at[jnp.arange(tok.shape[0]), slot0].set(
+                first, mode="drop")
+            return c, tok, gbuf
+
         def merge_fn(full, one, slot):
             def merge(f, o):
                 axis = None
@@ -264,14 +334,16 @@ class ServeEngine:
         self._decode = jax.jit(decode_fn, donate_argnums=(1, 2, 5))
         self._prefill_chunk = jax.jit(prefill_chunk_fn,
                                       donate_argnums=(1, 6, 7))
+        self._prefill_packed = jax.jit(prefill_packed_fn,
+                                       donate_argnums=(1, 8, 9))
         self._prefill = jax.jit(
             lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
         self._merge = jax.jit(merge_fn, donate_argnums=(0,))
 
-        # sensors
-        self.decode_latency = LatencySensor()
-        self.ttft = LatencySensor()
-        self.throughput = ThroughputSensor(window_seconds=5.0)
+        # sensors (share the injected clock so tests can be deterministic)
+        self.decode_latency = LatencySensor(clock=clock)
+        self.ttft = LatencySensor(clock=clock)
+        self.throughput = ThroughputSensor(window_seconds=5.0, clock=clock)
 
         # SmartConf PerfConfs
         self.enable_smartconf = enable_smartconf
@@ -339,6 +411,8 @@ class ServeEngine:
     # ------------------------------------------------------------- one tick
     def tick(self) -> dict:
         t0 = self.clock()
+        self._tick_issued = self._tick_live = 0
+        self._tick_packed_segments = 0
         self._update_controllers()
         self._admit()
         self._schedule()
@@ -351,6 +425,13 @@ class ServeEngine:
             "running": len(self.running) + len(self.prefilling),
             "finished": len(self.finished), "hbm": self.hbm_bytes(),
             "tokens": n_tokens,
+            # prefill-knob deputy sensors: the fraction of this tick's
+            # issued prefill tokens that were dead padding, and how many
+            # request segments shared the tick's prefill call(s) (packed:
+            # several per call even when their natural buckets differ)
+            "pad_fraction": (1.0 - self._tick_live / self._tick_issued
+                             if self._tick_issued else 0.0),
+            "packed_segments": self._tick_packed_segments,
             # pool-pressure sensors (budget-vs-occupancy, bench_serving)
             "kv_used_blocks": self.pool.used_blocks,
             "kv_budget_blocks": self.pool.max_blocks,
@@ -498,13 +579,102 @@ class ServeEngine:
         self.accountant.charge("queue", req.prompt_bytes)
         self.preemptions += 1
 
-    # ----------------------------------------------- bucketed chunked prefill
+    # ------------------------------------------------------------- prefill
     def _prefill_tick(self) -> None:
+        if not self.prefilling:
+            return
+        if self.prefill_impl == "packed":
+            self._prefill_tick_packed()
+        else:
+            self._prefill_tick_bucketed()
+
+    def _record_prefill_pad(self, issued: int, live: int, segments: int):
+        """Accumulates per tick: legacy mode prefills once per admitted
+        request, so a tick can record several calls."""
+        self.prefill_issued_tokens += issued
+        self.prefill_live_tokens += live
+        self._tick_issued += issued
+        self._tick_live += live
+        self._tick_packed_segments += segments
+
+    @property
+    def pad_fraction(self) -> float:
+        """Cumulative padded-but-dead fraction of all prefill tokens issued:
+        the gap between what ``serve.prefill_chunk_tokens`` claims to spend
+        and the prompt tokens actually advanced (near-zero under packing)."""
+        return 1.0 - self.prefill_live_tokens / max(
+            1, self.prefill_issued_tokens)
+
+    # ------------------------------------------- token-packed ragged prefill
+    def _prefill_tick_packed(self) -> None:
+        """Fill ONE ``[1, width]`` ragged stream with chunks from as many
+        prefilling requests as fit under the live
+        ``serve.prefill_chunk_tokens`` budget — across natural buckets, in
+        admission order — and advance them all in a single call.
+
+        The stream width is the power-of-two bucket of
+        ``min(demand, budget)`` capped at ``packed_width``: whenever demand
+        saturates the budget (the steady state under load) every tick
+        reuses ONE compiled shape, and drain-tail ticks shrink to narrow
+        shapes instead of issuing a mostly-dead full-width stream — so
+        ``pad_fraction`` measures quantization waste, not idle capacity."""
+        budget = max(1, min(int(self.prefill_chunk), self.packed_width))
+        demand = sum(len(r.prompt) - r.prefilled
+                     for r in self.prefilling.values())
+        width = min(self.packed_width, _bucket(min(demand, budget)))
+        budget = min(budget, width)
+        tokens = np.zeros((1, width), np.int32)
+        slot_id = np.full((width,), -1, np.int32)
+        posw = np.zeros((width,), np.int32)
+        start = np.zeros((self.max_batch,), np.int32)
+        seg_len = np.zeros((self.max_batch,), np.int32)
+        done = np.zeros((self.max_batch,), bool)
+        cursor = 0
+        packed: list[tuple[int, Request, int]] = []
+        for slot, req in sorted(self.prefilling.items(),
+                                key=lambda sr: sr[1].admit_seq):
+            if cursor >= budget:
+                break   # later arrivals re-pack from `prefilled` next tick
+            n = min(len(req.prompt) - req.prefilled, budget - cursor)
+            tokens[0, cursor:cursor + n] = \
+                req.prompt[req.prefilled:req.prefilled + n]
+            slot_id[cursor:cursor + n] = slot
+            posw[cursor:cursor + n] = np.arange(req.prefilled,
+                                                req.prefilled + n)
+            start[slot] = req.prefilled
+            seg_len[slot] = n
+            done[slot] = req.prefilled + n >= len(req.prompt)
+            packed.append((slot, req, n))
+            cursor += n
+        self.caches, self._slot_tok, self._gen_buf = self._prefill_packed(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(slot_id), jnp.asarray(posw), jnp.asarray(start),
+            jnp.asarray(seg_len), jnp.asarray(done), self._slot_tok,
+            self._gen_buf, self._bt() if self.paged else None)
+        self.prefill_calls += 1
+        self._prefill_shapes.add(width)        # O(1): one packed shape
+        self._record_prefill_pad(width, cursor, len(packed))
+        if done.any():
+            # a first token is a completion boundary: wait for the device
+            # (no host transfer) so TTFT reflects compute, not dispatch
+            self._slot_tok.block_until_ready()
+        now = self.clock()
+        for slot, req, n in packed:
+            req.prefilled += n
+            req.prefill_chunks += 1
+            if done[slot]:
+                req.gen_count = 1            # first token is on device
+                if req.first_token_t is None:
+                    req.first_token_t = now
+                    self.ttft.record(now - req.submitted_t)
+                self.slot_pos[slot] = len(req.prompt)
+                self.running[slot] = self.prefilling.pop(slot)
+
+    # ----------------------------------------------- bucketed chunked prefill
+    def _prefill_tick_bucketed(self) -> None:
         """Advance every prefilling slot by one chunk in a single padded
         call.  The chunk width is the power-of-two bucket covering the
         largest chunk this tick, so mixed prompt lengths reuse compiles."""
-        if not self.prefilling:
-            return
         cap = max(1, int(self.prefill_chunk))
         width = _bucket(max(min(len(r.prompt) - r.prefilled, cap)
                             for r in self.prefilling.values()))
@@ -525,6 +695,9 @@ class ServeEngine:
             self._bt() if self.paged else None)
         self.prefill_calls += 1
         self._prefill_shapes.add(width)
+        self._record_prefill_pad(width * len(self.prefilling),
+                                 int(lengths.sum()),
+                                 int((lengths > 0).sum()))
         if done.any():
             # a first token is a completion boundary: wait for the device
             # (no host transfer) so TTFT reflects compute, not dispatch
@@ -563,6 +736,7 @@ class ServeEngine:
                                   jnp.asarray(req.slot, jnp.int32))
         self.prefill_calls += 1
         self._prefill_shapes.add(len(req.prompt))
+        self._record_prefill_pad(len(req.prompt), len(req.prompt), 1)
         first = int(jnp.argmax(logits[0]))
         self._slot_tok = self._slot_tok.at[req.slot].set(first)
         self._gen_buf = self._gen_buf.at[req.slot, 0].set(first)

@@ -1,0 +1,305 @@
+"""Token-packed ragged prefill: one [1, P] stream per tick carries chunks
+from *different* requests back-to-back (no per-slot bucket padding), with
+per-token slot_id/position and segment-masked attention.  The correctness
+bar is token-identity against the one-shot oracle for every text arch,
+under the schedules the serve engine produces — ragged mixes, budgets that
+do not divide prompts, segment boundaries mid-row, dense AND paged KV,
+preemption mid-packed-chunk, and slot reuse restarting a segment at
+position 0."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import transformer, zoo
+from repro.serve import Request, ServeEngine
+
+CACHE_LEN = 64
+ROW_LENS = (50, 37, 11)
+BUDGET = 13          # divides no row; forces mid-row segment boundaries
+
+
+def _smoke_cfg(arch_id):
+    cfg = reduced(get_config(arch_id))
+    if cfg.moe:   # ample capacity -> deterministic routing for equivalence
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+def _run_packed(cfg, params, prompts, budget, caches, block_tables=None,
+                prefilled=None):
+    """Engine-shaped packed schedule: each call fills one [1, budget] stream
+    with chunks from as many unfinished rows as fit, in row order — so one
+    call routinely carries the tail of one request AND the head of the
+    next.  Returns (per-row completion logits, caches)."""
+    b = len(prompts)
+    prefilled = list(prefilled) if prefilled else [0] * b
+    done_logits = {}
+    bt = None if block_tables is None else jnp.asarray(block_tables)
+    while any(prefilled[i] < len(prompts[i]) for i in range(b)):
+        tokens = np.zeros((1, budget), np.int32)
+        slot_id = np.full((budget,), -1, np.int32)
+        pos = np.zeros((budget,), np.int32)
+        start = np.zeros((b,), np.int32)
+        seg_len = np.zeros((b,), np.int32)
+        cursor = 0
+        packed = []
+        for i, p in enumerate(prompts):
+            if cursor >= budget or prefilled[i] >= len(p):
+                continue
+            n = min(len(p) - prefilled[i], budget - cursor)
+            tokens[0, cursor:cursor + n] = p[prefilled[i]:prefilled[i] + n]
+            slot_id[cursor:cursor + n] = i
+            pos[cursor:cursor + n] = np.arange(prefilled[i], prefilled[i] + n)
+            start[i] = prefilled[i]
+            seg_len[i] = n
+            packed.append((i, n))
+            cursor += n
+        logits, caches = transformer.prefill_packed(
+            cfg, params, caches, jnp.asarray(tokens), jnp.asarray(slot_id),
+            jnp.asarray(pos), jnp.asarray(start), jnp.asarray(seg_len),
+            block_tables=bt)
+        for i, n in packed:
+            prefilled[i] += n
+            if prefilled[i] >= len(prompts[i]) and i not in done_logits:
+                done_logits[i] = logits[i]
+    return done_logits, caches
+
+
+def _rel_err(got, ref):
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    return float(jnp.max(jnp.abs(got - ref))) / scale
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_packed_prefill_matches_one_shot_every_arch(arch_id, rng):
+    cfg = _smoke_cfg(arch_id)
+    if cfg.encoder_decoder or cfg.frontend == "vision":
+        # modality prefixes stay one-shot — and refuse loudly
+        with pytest.raises(ValueError, match="packed prefill"):
+            transformer.prefill_packed(
+                cfg, None, None, jnp.zeros((1, 4), jnp.int32),
+                jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32),
+                jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32))
+        return
+
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in ROW_LENS]
+    refs = [transformer.prefill(cfg, params, {"tokens": jnp.asarray(p[None])},
+                                cache_len=CACHE_LEN) for p in prompts]
+
+    caches = zoo.init_cache(cfg, len(prompts), CACHE_LEN)
+    done_logits, caches = _run_packed(cfg, params, prompts, BUDGET, caches)
+
+    for i, (ref_logits, _) in enumerate(refs):
+        err = _rel_err(done_logits[i], ref_logits[0])
+        assert err < 5e-3, f"{arch_id} row {i}: packed prefill rel={err:.2e}"
+
+    # one decode step from both caches: the packed stream must have carried
+    # every row's exact state (K/V, recurrent scan state, token shifts)
+    tok = jnp.asarray([int(jnp.argmax(r[0][0])) for r in refs], jnp.int32)
+    pos = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    d_pk, _ = transformer.decode_step(cfg, params, caches, tok, pos)
+    for i, (_, ref_caches) in enumerate(refs):
+        d_ref, _ = transformer.decode_step(cfg, params, ref_caches,
+                                           tok[i:i + 1], pos[i:i + 1])
+        err = _rel_err(d_pk[i], d_ref[0])
+        assert err < 5e-3, f"{arch_id} row {i}: decode handoff rel={err:.2e}"
+
+
+@pytest.mark.parametrize("arch_id",
+                         ["yi-6b", "gemma3-4b", "deepseek-moe-16b"])
+def test_packed_prefill_paged_matches_one_shot(arch_id, rng):
+    """The same packed schedule writing through per-token block-table
+    routing (``_paged_scatter`` with ``seg=slot_id``) — including the
+    windowed gemma3 local layers and MoE routing."""
+    cfg = _smoke_cfg(arch_id)
+    assert zoo.supports_paged_kv(cfg), arch_id
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in ROW_LENS]
+    block_tokens = 16
+    bps = CACHE_LEN // block_tokens
+    b = len(prompts)
+    caches = zoo.init_paged_cache(cfg, b * bps, block_tokens)
+    # out-of-order physical blocks: only the table gives them meaning
+    tables = np.arange(b * bps, dtype=np.int32)[::-1].reshape(b, bps)
+
+    done_logits, _ = _run_packed(cfg, params, prompts, BUDGET, caches,
+                                 block_tables=tables)
+    for i, p in enumerate(prompts):
+        ref_logits, _ = transformer.prefill(
+            cfg, params, {"tokens": jnp.asarray(p[None])},
+            cache_len=CACHE_LEN)
+        err = _rel_err(done_logits[i], ref_logits[0])
+        assert err < 5e-3, f"{arch_id} row {i}: paged packed rel={err:.2e}"
+
+
+@pytest.mark.parametrize("arch_id", ["rwkv6-7b", "recurrentgemma-9b"])
+def test_packed_segment_restart_resets_recurrent_state(arch_id, rng):
+    """A segment starting at position 0 in a reused slot (new request, or a
+    preempted one recomputing) must begin from zero scan state."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(1))
+    p1 = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+
+    caches = zoo.init_cache(cfg, 1, CACHE_LEN)
+    _, caches = _run_packed(cfg, params, [p1], 8, caches)
+    logits, _ = _run_packed(cfg, params, [p2], 8, caches)
+
+    ref_logits, _ = transformer.prefill(
+        cfg, params, {"tokens": jnp.asarray(p2[None])}, cache_len=CACHE_LEN)
+    err = _rel_err(logits[0], ref_logits[0])
+    assert err < 5e-3, f"{arch_id}: stale state leaked, rel={err:.2e}"
+
+
+def _engine_outputs(cfg, params, prompts, mode, *, max_new=6, chunk=16,
+                    max_batch=2, cache_len=96, kv_mode="auto"):
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
+                      enable_smartconf=False, prefill_mode=mode,
+                      kv_mode=kv_mode)
+    eng.prefill_chunk = chunk
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new))
+    ticks = 0
+    while len(eng.finished) < len(prompts) and ticks < 500:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == len(prompts), mode
+    outs = {r.req_id: list(r.generated) for r in eng.finished}
+    stats = dict(compiles=eng.prefill_compiles,
+                 pad_fraction=eng.pad_fraction,
+                 reqs={r.req_id: r for r in eng.finished})
+    eng.close()
+    return outs, stats
+
+
+@pytest.mark.parametrize("arch_id",
+                         ["yi-6b", "recurrentgemma-9b", "deepseek-moe-16b"])
+def test_engine_packed_matches_legacy(arch_id, rng):
+    """End-to-end engine identity with more requests than slots: the packed
+    scheduler (cross-bucket packing, slot reuse, interleaved decode) must
+    generate token-identical output to the one-shot legacy engine."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 9, 23, 31, 45)]
+    legacy, _ = _engine_outputs(cfg, params, prompts, "legacy")
+    packed, st = _engine_outputs(cfg, params, prompts, "packed")
+    assert legacy == packed
+    # one stream shape in steady state (drain ticks may bucket down)
+    assert st["compiles"] <= 2
+
+
+def test_engine_packed_budget_smaller_than_remaining(rng):
+    """serve.prefill_chunk_tokens below one request's remaining chunk: the
+    request must spread over ceil(len/budget) packed calls and still match
+    the one-shot oracle."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, 30).astype(np.int32)]
+    legacy, _ = _engine_outputs(cfg, params, prompts, "legacy", chunk=7)
+    packed, st = _engine_outputs(cfg, params, prompts, "packed", chunk=7)
+    assert legacy == packed
+    assert st["reqs"][0].prefill_chunks == 5     # ceil(30 / 7)
+
+
+def test_engine_packed_preemption_mid_chunk(rng):
+    """A paged engine preempted mid-packed-prefill (budget cut below
+    occupancy) must recompute the kicked request from ``prefilled = 0`` on
+    re-admission and still emit oracle-identical tokens."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (40, 36)]
+    legacy, _ = _engine_outputs(cfg, params, prompts, "legacy",
+                                kv_mode="dense", max_new=4)
+
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      enable_smartconf=False, prefill_mode="packed",
+                      kv_mode="paged")
+    # budget 48: one packed call finishes request 0 (40 tokens) and starts
+    # request 1 mid-chunk (8 of 36)
+    eng.prefill_chunk = 48
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, 4))
+    eng.tick()
+    victim = eng.prefilling[1]
+    assert 0 < victim.prefilled < len(victim.prompt)
+    full_budget = eng.pool.max_blocks
+    # cut below current occupancy (each request holds 3 blocks): the newest
+    # request is kicked back to the queue mid-packed-chunk
+    eng.set_kv_budget(eng.pool.used_blocks - 1)
+    assert eng.preemptions == 1 and victim.slot is None
+    assert victim.prefilled == 0                 # re-packs from scratch
+    eng.set_kv_budget(full_budget)
+    ticks = 0
+    while len(eng.finished) < len(prompts) and ticks < 500:
+        eng.tick()
+        ticks += 1
+    assert victim.preempted == 1
+    outs = {r.req_id: list(r.generated) for r in eng.finished}
+    eng.close()
+    assert outs == legacy
+
+
+def test_engine_packed_tick_stats(rng):
+    """tick() must expose the prefill-knob deputy sensors: several requests
+    share one packed call (packed_segments > 1) and the pad fraction stays
+    below the bucketed path's quantization waste."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (9, 13, 21, 30, 44)]
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=128,
+                      enable_smartconf=False, prefill_mode="packed")
+    eng.prefill_chunk = 64
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, 4))
+    stats = eng.tick()
+    # all four slots' chunks (9 + 13 + 21 + 21-of-30, four distinct natural
+    # buckets) rode in ONE saturated stream: zero padding this tick
+    assert stats["packed_segments"] == 4
+    assert stats["pad_fraction"] == 0.0
+    ticks = 0
+    while len(eng.finished) < len(prompts) and ticks < 200:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == len(prompts)
+    packed_pad = eng.pad_fraction
+    eng.close()
+
+    _, bucketed = _engine_outputs(cfg, params, prompts, "bucketed",
+                                  max_new=4, max_batch=4, cache_len=128,
+                                  chunk=64)
+    assert packed_pad < bucketed["pad_fraction"]
+
+
+def test_engine_prefill_mode_env_toggle(rng, monkeypatch):
+    """REPRO_PREFILL_MODE re-routes what prefill_mode='auto' resolves to
+    (the CI matrix leg) without touching explicit requests."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+
+    def impl(**kw):
+        eng = ServeEngine(cfg, params, max_batch=1, cache_len=32,
+                          enable_smartconf=False, **kw)
+        mode = eng.prefill_impl
+        eng.close()
+        return mode
+
+    assert impl() == "packed"                      # the text-arch default
+    monkeypatch.setenv("REPRO_PREFILL_MODE", "bucketed")
+    assert impl() == "bucketed"
+    assert impl(prefill_mode="packed") == "packed"  # explicit beats env
+    monkeypatch.setenv("REPRO_PREFILL_MODE", "one_shot")
+    assert impl() == "legacy"
+    monkeypatch.setenv("REPRO_PREFILL_MODE", "bogus")
+    with pytest.raises(ValueError, match="prefill_mode"):
+        impl()

@@ -247,20 +247,24 @@ def test_engine_paged_pallas_interpret_matches_xla(small_model, rng):
 # ------------------------------------------------------- bench smoke gate
 def test_bench_serving_smoke():
     """Tier-1 gate on benchmarks/bench_serving.py: the smoke run exercises
-    legacy+bucketed prefill, paged+dense decode, and both budget-cut paths
-    (with its own internal paged/dense token-parity assertion)."""
+    legacy+bucketed+packed prefill, paged+dense decode, and both budget-cut
+    paths (with its own internal token-parity, packed-compile-count, and
+    pad-fraction-drop assertions)."""
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import bench_serving
 
     rows = bench_serving.run(smoke=True)
     names = {r.split(",")[0] for r in rows}
     assert {"serving_prefill_legacy", "serving_prefill_bucketed",
+            "serving_prefill_packed", "serving_packed_vs_bucketed",
             "serving_decode_paged", "serving_decode_dense",
             "serving_kv_budget_cut_paged",
             "serving_kv_budget_cut_dense",
             # universal chunked prefill: one recurrent + one MoE arch run
-            # legacy-vs-bucketed (token-identity asserted inside the bench)
+            # the full mode sweep (token-identity asserted inside the bench)
+            "serving_arch_rwkv6_packed",
             "serving_arch_rwkv6_compile_reduction",
+            "serving_arch_deepseek_packed",
             "serving_arch_deepseek_compile_reduction"} <= names
     cut = {r.split(",")[0]: r for r in rows}
     paged_freed = int(cut["serving_kv_budget_cut_paged"]

@@ -127,6 +127,35 @@ def test_bucketed_prefill_matches_legacy_and_reuses_compiles(small_model, rng):
     assert compiles["legacy"] >= 2 * compiles["bucketed"], compiles
 
 
+def test_engine_clock_injectable_deterministic_ttft(small_model, rng):
+    """TTFT/latency sensing must be drivable by an injected clock — no
+    sleeping, no wall-clock flake: the recorded TTFT is exactly the fake
+    clock's delta between submit and the first-token tick."""
+    cfg, params = small_model
+    t = [100.0]
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=64,
+                      enable_smartconf=False, clock=lambda: t[0])
+    req = Request(0, rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 2)
+    eng.submit(req)
+    assert req.submitted_t == 100.0
+    t[0] = 107.5
+    eng.tick()
+    assert req.first_token_t == 107.5
+    assert eng.ttft.quantile(0.5) == 7.5
+    assert eng.decode_latency.max() == 0.0     # same fake instant
+    eng.close()
+
+
+def test_latency_sensor_measure_uses_injected_clock():
+    from repro.core.sensors import LatencySensor
+    t = [0.0]
+    sensor = LatencySensor(clock=lambda: t[0])
+    with sensor.measure():
+        t[0] = 2.25
+    assert sensor.mean() == 2.25
+    assert sensor.max() == 2.25
+
+
 def test_kv_pool_accounting(small_model):
     cfg, _ = small_model
     pool = KVBlockPool(cfg, block_tokens=16, max_blocks=4)
