@@ -11,7 +11,12 @@ stream per tick, chunks from many requests back-to-back).  Rows report:
 
   * prefill jit-compile count (packed: one stream shape in steady state;
     bucketed: one program per power-of-two bucket; legacy: one per distinct
-    prompt length),
+    prompt length) and total model programs (split paths pay the
+    standalone decode program on top; unified packed ticks fuse it),
+  * model dispatches per tick (``serving_unified_ticks``): the packed
+    engine's unified prefill+decode stream costs exactly ONE compiled
+    dispatch per steady-state tick, the split paths up to two — asserted,
+    and re-checked from the emitted JSON by the CI bench-smoke job,
   * ``pad_fraction`` — dead padding per issued prefill token; asserted to
     DROP under packing, and (full run) to sit under 5% on the mixed
     workload,
@@ -87,10 +92,12 @@ def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
         eng.submit(Request(i, p, max_new))
     t0 = time.perf_counter()
     ticks = 0
-    max_segments = 0
+    max_segments = max_dispatches = total_dispatches = 0
     while len(eng.finished) < len(prompts) and ticks < 4000:
         stats = eng.tick()
         max_segments = max(max_segments, stats["packed_segments"])
+        max_dispatches = max(max_dispatches, stats["dispatches"])
+        total_dispatches += stats["dispatches"]
         ticks += 1
     wall = time.perf_counter() - t0
     assert len(eng.finished) == len(prompts), f"{mode}: incomplete"
@@ -99,9 +106,12 @@ def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
         "ticks": ticks,
         "wall_s": wall,
         "prefill_compiles": eng.prefill_compiles,
+        "model_programs": eng.model_programs,
         "prefill_calls": eng.prefill_calls,
         "pad_fraction": eng.pad_fraction,
         "max_segments": max_segments,
+        "max_dispatches": max_dispatches,
+        "dispatches_per_tick": total_dispatches / max(1, ticks),
         "ttft_p50": ttfts[len(ttfts) // 2],
         "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
         "generated": {r.req_id: list(r.generated) for r in eng.finished},
@@ -111,15 +121,19 @@ def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
 
 
 def _decode_throughput(cfg, params, kv_mode: str, *, max_batch: int,
-                       cache_len: int, n_ticks: int = 60):
+                       cache_len: int, n_ticks: int = 60,
+                       prefill_mode: str = "auto"):
     """Steady-state decode tokens/s at full batch occupancy: all slots
     prefill first (outside the timed region), then pure decode ticks are
     timed.  kv_mode isolates the paged block-table gather + kernel against
-    the dense per-slot cache on the identical schedule."""
+    the dense per-slot cache on the identical schedule; prefill_mode
+    chooses unified (packed: decode segments ride the stream dispatch) vs
+    split (bucketed: the standalone decode program) ticks."""
     from repro.serve import Request, ServeEngine
 
     eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
-                      enable_smartconf=False, kv_mode=kv_mode)
+                      enable_smartconf=False, kv_mode=kv_mode,
+                      prefill_mode=prefill_mode)
     rng = np.random.default_rng(11)
     for i in range(max_batch):
         eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
@@ -129,6 +143,9 @@ def _decode_throughput(cfg, params, kv_mode: str, *, max_batch: int,
         eng.tick()                          # prefill + warm the decode compile
         ticks += 1
     assert len(eng.running) == max_batch, f"{kv_mode}: slots did not fill"
+    eng.tick()   # two steady-state ticks outside the timed region, so any
+    eng.tick()   # shape compiled only once slots fill never lands inside
+    #              the measurement
     t0 = time.perf_counter()
     tokens = sum(eng.tick()["tokens"] for _ in range(n_ticks))
     tok_s = tokens / (time.perf_counter() - t0)
@@ -203,8 +220,10 @@ def run(smoke: bool = False, prefill_mode: str | None = None) -> list[str]:
     for mode, r in res.items():
         rows.append(fmt_row(
             f"serving_prefill_{mode}", r["wall_s"] / r["ticks"] * 1e6,
-            f"compiles={r['prefill_compiles']} calls={r['prefill_calls']} "
+            f"compiles={r['prefill_compiles']} "
+            f"programs={r['model_programs']} calls={r['prefill_calls']} "
             f"pad_fraction={r['pad_fraction']:.3f} "
+            f"dispatches_per_tick={r['dispatches_per_tick']:.2f} "
             f"distinct_lengths={n_lengths}"))
         rows.append(fmt_row(
             f"serving_ttft_{mode}", r["ttft_p50"] * 1e6,
@@ -236,6 +255,37 @@ def run(smoke: bool = False, prefill_mode: str | None = None) -> list[str]:
             f"pad_packed={p['pad_fraction']:.3f} "
             f"compiles={b['prefill_compiles']}/{p['prefill_compiles']} "
             f"max_segments_per_call={p['max_segments']}"))
+        # unified prefill+decode ticks: the packed engine fuses decode into
+        # the stream dispatch, so its steady-state tick costs exactly ONE
+        # compiled dispatch while the split (bucketed) path pays two when
+        # prefill and decode overlap — a deterministic scheduling fact,
+        # asserted so CI pins it (.github/workflows/ci.yml re-checks the
+        # ordering from the emitted JSON)
+        assert p["max_dispatches"] == 1, \
+            f"unified tick issued {p['max_dispatches']} dispatches"
+        assert b["max_dispatches"] == 2, \
+            "split path should overlap prefill + decode on this workload"
+        assert p["dispatches_per_tick"] <= b["dispatches_per_tick"], \
+            (p["dispatches_per_tick"], b["dispatches_per_tick"])
+        assert p["model_programs"] <= b["model_programs"], \
+            (p["model_programs"], b["model_programs"])
+        rows.append(fmt_row(
+            "serving_unified_ticks", 0.0,
+            f"dispatches_per_tick_unified={p['dispatches_per_tick']:.2f} "
+            f"dispatches_per_tick_split={b['dispatches_per_tick']:.2f} "
+            f"max_unified={p['max_dispatches']} "
+            f"max_split={b['max_dispatches']} "
+            f"programs={p['model_programs']}/{b['model_programs']}"))
+        # end-to-end tokens/s on the mixed workload (same requests, same
+        # generated token count): the tick where prefill and decode overlap
+        # is where unification pays — this is the fused dispatch measured,
+        # not the drain tail
+        gen_tokens = sum(len(g) for g in p["generated"].values())
+        rows.append(fmt_row(
+            "serving_e2e_unified_vs_split", 0.0,
+            f"unified/split={(gen_tokens / p['wall_s']) / max(gen_tokens / b['wall_s'], 1e-9):.2f}x "
+            f"tokens_per_s_unified={gen_tokens / p['wall_s']:.1f} "
+            f"tokens_per_s_split={gen_tokens / b['wall_s']:.1f}"))
 
     tok_s = {m: _decode_throughput(cfg, params, m, max_batch=max_batch,
                                    cache_len=cache_len, n_ticks=decode_ticks)
@@ -248,6 +298,22 @@ def run(smoke: bool = False, prefill_mode: str | None = None) -> list[str]:
         "serving_decode_paged_vs_dense", 0.0,
         f"paged/dense={tok_s['paged'] / max(tok_s['dense'], 1e-9):.2f}x "
         "(goal >=0.9x)"))
+    # drain-phase routing parity: decode-ONLY ticks on the packed engine
+    # route to the same specialized decode program the split path runs
+    # (engine `_tick_unified` fuses only where prefill and decode overlap),
+    # so this ratio is ~1.0 *by construction* — the row pins that routing
+    # and would catch it regressing to a mostly-dead stream dispatch.  The
+    # fused mixed-tick cost is what `serving_e2e_unified_vs_split` and the
+    # dispatches/tick row above measure.
+    split_tok = _decode_throughput(cfg, params, "paged",
+                                   max_batch=max_batch, cache_len=cache_len,
+                                   n_ticks=decode_ticks,
+                                   prefill_mode="bucketed")
+    rows.append(fmt_row(
+        "serving_decode_unified_vs_split", 0.0,
+        f"unified/split={tok_s['paged'] / max(split_tok, 1e-9):.2f}x "
+        "(decode-only drain ticks share the decode program: parity by "
+        "construction, goal >=0.9x)"))
 
     for m in ("dense", "paged"):
         hbm0, hbm1, pre = _budget_cut(cfg, params, m, max_batch=max_batch,

@@ -119,6 +119,11 @@ class LatencySensor:
         with self._lock:
             return sorted(self._buf)
 
+    def count(self) -> int:
+        """Samples currently retained in the window."""
+        with self._lock:
+            return len(self._buf)
+
     def mean(self) -> float:
         xs = self._snapshot()
         return sum(xs) / len(xs) if xs else 0.0
@@ -160,11 +165,26 @@ class ThroughputSensor:
             self._events.popleft()
 
     def rate(self) -> float:
+        """Events/sec over the retained window.
+
+        Dividing by the full ``window_seconds`` before the window has
+        filled under-reports the rate (bench warm-up, short smoke runs):
+        the honest denominator is the elapsed time since the first
+        *retained* event, clamped to the window.  A window whose events
+        all share one instant has no measurable span; fall back to the
+        full window (the conservative old behavior) instead of dividing
+        by zero."""
         now = self._clock()
         with self._lock:
             self._trim(now)
+            if not self._events:
+                return 0.0
             n = sum(c for _, c in self._events)
-        return n / self.window_seconds
+            span = now - self._events[0][0]
+        span = min(self.window_seconds, span)
+        if span <= 0.0:
+            span = self.window_seconds
+        return n / span
 
 
 class QueueGauge:

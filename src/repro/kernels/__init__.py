@@ -1,4 +1,5 @@
-"""Pallas kernel families (flash/decode/paged attention, rwkv6, rglru).
+"""Pallas kernel families (flash/decode/paged/segment attention, rwkv6,
+rglru).
 
 Each family package holds the kernel (`<name>.py`), a pure-jnp oracle
 (`ref.py`), and a thin dispatcher (`ops.py`).  Every dispatcher resolves its
@@ -11,9 +12,9 @@ implementation through :func:`resolve_impl`, the single place defining the
     CI exercises the real kernel code path end-to-end.
 
 Resolution order: explicit ``force=`` argument, then the family's environment
-variable (``REPRO_ATTN_IMPL``, ``REPRO_PAGED_IMPL``, ``REPRO_RWKV6_IMPL``,
-``REPRO_RGLRU_IMPL``), then the backend default (``pallas`` on TPU, ``xla``
-everywhere else).
+variable (``REPRO_ATTN_IMPL``, ``REPRO_PAGED_IMPL``, ``REPRO_SEGMENT_IMPL``,
+``REPRO_RWKV6_IMPL``, ``REPRO_RGLRU_IMPL``), then the backend default
+(``pallas`` on TPU, ``xla`` everywhere else).
 """
 
 from __future__ import annotations

@@ -1,0 +1,43 @@
+"""Jitted wrappers with backend dispatch (pallas on TPU, XLA elsewhere).
+
+``REPRO_SEGMENT_IMPL`` overrides the automatic choice (``xla`` | ``pallas``
+| ``pallas_interpret``); ``pallas_interpret`` lets CPU CI run the real fused
+kernels end-to-end through the serve engine's unified prefill+decode ticks.
+"""
+
+from __future__ import annotations
+
+from repro.kernels import resolve_impl
+
+from .ref import paged_segment_attention_ref, segment_attention_ref
+from .segment_attention import paged_segment_attention, segment_attention
+
+ENV_VAR = "REPRO_SEGMENT_IMPL"
+
+
+def segment_attention_op(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                         window: int = 0, force: str | None = None):
+    """Flat-key segment attention: q [P,H,D]; k,v [N,Kv,D]; q_pos/q_seg [P];
+    k_pos/k_seg [N] -> [P,H,D]."""
+    mode = resolve_impl(force, ENV_VAR)
+    if mode == "xla":
+        return segment_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                                     window=window)
+    return segment_attention(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                             window=window,
+                             interpret=(mode == "pallas_interpret"))
+
+
+def paged_segment_attention_op(q, k_store, v_store, block_tables, q_pos,
+                               q_seg, *, window: int = 0,
+                               force: str | None = None):
+    """Block-store segment attention: q [P,H,D]; stores [N,Kv,T,D]; tables
+    [B,M] -> [P,H,D].  The xla mode materializes the table-gathered view
+    (the oracle); pallas gathers via scalar prefetch inside the kernel."""
+    mode = resolve_impl(force, ENV_VAR)
+    if mode == "xla":
+        return paged_segment_attention_ref(q, k_store, v_store, block_tables,
+                                           q_pos, q_seg, window=window)
+    return paged_segment_attention(q, k_store, v_store, block_tables, q_pos,
+                                   q_seg, window=window,
+                                   interpret=(mode == "pallas_interpret"))

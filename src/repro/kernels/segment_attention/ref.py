@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for fused segment-masked attention (packed streams).
+
+One flat query stream carries contiguous chunks from *different* requests
+(prefill chunks and length-1 decode segments alike); every query and key
+names its owning segment, and a key is visible iff it belongs to the same
+segment, has been written (``k_pos >= 0``), is causal (``k_pos <= q_pos``),
+and sits inside the sliding window.  Queries whose segment id is negative
+(dead pad lanes) — or whose predicate masks every key — return **exact
+zeros**, so kernel parity can be asserted on all lanes, not just live ones.
+
+The paged oracle gathers the logical K/V view through the block table
+(``kernels.paged_attention.paged_gather``) and defers to the flat oracle, so
+the paged and flat oracles can never drift apart.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segment_mask(q_pos, k_pos, q_seg, k_seg, window: int):
+    """[P, N] bool visibility predicate (the packed-segment ABI)."""
+    ok = (k_seg[None, :] == q_seg[:, None]) & (q_seg[:, None] >= 0)
+    ok &= k_pos[None, :] >= 0
+    ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return ok
+
+
+def segment_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                          window: int = 0):
+    """q: [P,H,D]; k,v: [N,Kv,D]; q_pos/q_seg: [P]; k_pos/k_seg: [N]
+    -> [P,H,D].  GQA/MQA via grouped einsum (no repeated K/V)."""
+    p, h, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    scale = d ** -0.5
+    qg = (q * scale).reshape(p, kvh, g, d)
+    s = jnp.einsum("pkgd,nkd->kgpn", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))                    # [Kv,G,P,N]
+    ok = _segment_mask(q_pos, k_pos, q_seg, k_seg, window)    # [P,N]
+    s = jnp.where(ok[None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    # fully-masked queries (dead pad lanes) would softmax uniformly over
+    # -1e30 scores and emit garbage; zero them instead
+    live = ok.any(axis=-1)                                    # [P]
+    pr = jnp.where(live[None, None, :, None], pr, 0.0)
+    o = jnp.einsum("kgpn,nkd->pkgd", pr, v.astype(jnp.float32))
+    return o.reshape(p, h, d).astype(q.dtype)
+
+
+def paged_segment_attention_ref(q, k_store, v_store, block_tables, q_pos,
+                                q_seg, *, window: int = 0):
+    """q: [P,H,D]; k_store/v_store: [N,Kv,T,D]; block_tables: [B,M] int32
+    (-1 = unallocated); q_pos/q_seg: [P] (segment id == block-table row)
+    -> [P,H,D].  Key positions are implied by table order and key segments
+    by table row; write-then-gather callers rely on every same-segment
+    position <= q_pos being live in the store."""
+    from repro.kernels.paged_attention import paged_gather
+    k, v, k_pos = paged_gather(k_store, v_store, block_tables)
+    b, kvh, mt, d = k.shape
+    k_flat = jnp.swapaxes(k, 1, 2).reshape(b * mt, kvh, d)
+    v_flat = jnp.swapaxes(v, 1, 2).reshape(b * mt, kvh, d)
+    kpos_flat = k_pos.reshape(b * mt)
+    kseg_flat = jnp.repeat(jnp.arange(b, dtype=jnp.int32), mt)
+    return segment_attention_ref(q, k_flat, v_flat, q_pos, kpos_flat,
+                                 q_seg, kseg_flat, window=window)

@@ -28,13 +28,16 @@ def main() -> None:
     ap.add_argument("--budget-headroom-mb", type=float, default=2.0)
     ap.add_argument("--prefill-mode", default="auto",
                     choices=["auto", "bucketed", "packed", "one_shot"],
-                    help="packed = ONE token-packed ragged stream per tick "
-                         "(chunks from many requests share the call; the "
+                    help="packed = unified ticks: ONE token-packed ragged "
+                         "stream per tick carrying prefill chunks AND "
+                         "every running slot's decode token as a length-1 "
+                         "segment (one fused dispatch; the "
                          "serve.prefill_chunk_tokens knob is the literal "
                          "per-tick token budget); bucketed = padded "
-                         "power-of-two chunked prefill (compile-count "
-                         "O(log len)); one_shot = exact whole-prompt "
-                         "prefill per request (the legacy baseline)")
+                         "power-of-two chunked prefill + a separate decode "
+                         "dispatch (compile-count O(log len)); one_shot = "
+                         "exact whole-prompt prefill per request (the "
+                         "legacy baseline)")
     ap.add_argument("--kv-mode", default="auto",
                     choices=["auto", "paged", "dense"],
                     help="paged = block-table KV cache + paged decode "
@@ -66,7 +69,8 @@ def main() -> None:
           f"ticks; HBM violations {eng.accountant.violations}; "
           f"peak {eng.accountant.peak_bytes/1e6:.1f}/{budget/1e6:.1f} MB; "
           f"TTFT {eng.ttft.mean()*1e3:.0f}ms; prefill[{eng.prefill_impl}] "
-          f"{eng.prefill_calls} calls / {eng.prefill_compiles} compiles, "
+          f"{eng.prefill_calls} calls / {eng.model_programs} programs, "
+          f"{eng.model_dispatches/max(1, ticks):.2f} dispatches/tick, "
           f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
           f"{eng.preemptions} preemptions")

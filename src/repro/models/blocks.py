@@ -432,21 +432,18 @@ def block_apply_packed(cfg, kind: str, params: dict, x: jax.Array,
     q_seg = slot_id[None, :]                                     # [1,P]
 
     if block_tables is not None:
-        # write-then-gather (exact: segments prefill front-to-back, so every
+        # write-then-attend (exact: segments advance front-to-back, so every
         # position <= q_pos of the same segment is live in the store); the
-        # in-stream keys are therefore already inside the gathered view
+        # in-stream keys are therefore already inside the block store.  The
+        # xla impl materializes the table-gathered view; the Pallas kernel
+        # gathers blocks via scalar prefetch with the segment predicate
+        # fused into the tile mask (key segment = table row).
+        from repro.kernels.segment_attention import paged_segment_attention_op
         new_cache = _paged_scatter(cache, k, v, pos2, valid, block_tables,
                                    seg=q_seg)
-        k_view, v_view, kpos_view = _paged_view(new_cache, block_tables)
-        b, mt = kpos_view.shape
-        kvh, hd = k_view.shape[2], k_view.shape[3]
-        k_eff = k_view.reshape(1, b * mt, kvh, hd)
-        v_eff = v_view.reshape(1, b * mt, kvh, hd)
-        kpos_eff = kpos_view.reshape(1, b * mt)
-        kseg_eff = jnp.repeat(jnp.arange(b, dtype=jnp.int32), mt)[None, :]
-        o = layers.segment_attention(q, k_eff, v_eff, q_pos=pos2,
-                                     k_pos=kpos_eff, q_seg=q_seg,
-                                     k_seg=kseg_eff, window=window)
+        o = paged_segment_attention_op(
+            q[0], new_cache["k"], new_cache["v"], block_tables, pos,
+            slot_id, window=window)[None].astype(q.dtype)
         x = x + layers.attn_output(params["attn"], o)
     else:
         b, n = cache["k"].shape[0], cache["k"].shape[1]

@@ -255,17 +255,20 @@ def segment_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     The unmasked (segment, position) pairs are exactly the pairs the
     per-slot :func:`chunk_attention` path exposes, so packed and bucketed
-    prefill agree up to summation order."""
-    scale = q.shape[-1] ** -0.5
-    s = _grouped_scores(q * scale, k).astype(jnp.float32)     # [B,H,P,N]
-    ok = (k_seg[:, None, :] == q_seg[:, :, None]) & (q_seg[:, :, None] >= 0)
-    ok &= k_pos[:, None, :] >= 0
-    ok &= k_pos[:, None, :] <= q_pos[:, :, None]
-    if window > 0:
-        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
-    s = jnp.where(ok[:, None, :, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    return _grouped_out(p, v)
+    prefill agree up to summation order.  Fully-masked queries (dead pad
+    lanes, or a live lane whose predicate admits no key) return exact
+    zeros, so XLA-vs-Pallas parity holds on every lane.
+
+    Dispatches through ``kernels/segment_attention`` (``REPRO_SEGMENT_IMPL``
+    = ``xla`` | ``pallas`` | ``pallas_interpret``): the fused Pallas kernel
+    runs an online softmax over K/V tiles with the same-segment / written /
+    causal / window predicate fused into the tile mask, so the
+    ``[B,H,P,N]`` score matrix never materializes."""
+    from repro.kernels.segment_attention import segment_attention_op
+    out = [segment_attention_op(q[i], k[i], v[i], q_pos[i], k_pos[i],
+                                q_seg[i], k_seg[i], window=window)
+           for i in range(q.shape[0])]   # the packed stream is B == 1
+    return jnp.stack(out).astype(q.dtype)
 
 
 def attn_project_q(params, x, *, positions, theta):

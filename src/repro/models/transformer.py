@@ -13,6 +13,10 @@ Public entry points (all pure):
     prefill(cfg, params, batch, cache_len) -> (last_logits, caches)
     prefill_chunk(cfg, params, caches, tokens, start, lengths)
                                         -> (last_logits, caches)  [in-place]
+    step_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len)
+                                        -> (last_logits, caches)  [in-place;
+                                        one ragged stream of prefill chunks
+                                        + length-1 decode segments]
     decode_step(cfg, params, caches, token, pos) -> (logits, caches)
     init_cache(cfg, batch, cache_len)   -> caches
 """
@@ -503,29 +507,37 @@ def prefill_chunk(cfg, params, caches, tokens, start, lengths,
     return logits, caches
 
 
-def prefill_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
-                   block_tables=None):
-    """Advance prefill by ONE token-packed ragged stream, in place.
+def step_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
+                block_tables=None):
+    """Advance the engine by ONE token-packed ragged stream, in place —
+    prefill chunks AND decode tokens ride the same call (unified ticks).
 
-    tokens: [1,P] int32 — a single flat stream packing contiguous chunks
-    from up to B requests back-to-back (no per-slot padding: a new
-    request's first chunk rides in the same call as another request's later
-    chunk); slot_id: [P] owning slot per token (-1 = dead pad); pos: [P]
+    tokens: [1,P] int32 — a single flat stream packing contiguous segments
+    from up to B requests back-to-back: a prefilling request contributes
+    its next prompt chunk, a running request contributes its one decode
+    token as a length-1 segment (no per-slot padding, no separate decode
+    dispatch); slot_id: [P] owning slot per token (-1 = dead pad); pos: [P]
     absolute position of each token within its own request; start/seg_len:
-    [B] per-slot chunk start and token count this call (the segment
-    boundaries, cu_seqlens-style).  ``block_tables`` ([B,M] int32,
-    optional) routes attention K/V through the paged block store with a
-    per-token scatter.  Returns (next-token logits [B,V] at each slot's
-    last packed token — garbage for slots with no tokens this call — and
-    the updated caches).
+    [B] per-slot segment start and token count this call (the segment
+    boundaries, cu_seqlens-style; a decode segment has ``start == its
+    current position`` and ``seg_len == 1``).  ``block_tables`` ([B,M]
+    int32, optional) routes attention K/V through the paged block store
+    with a per-token scatter.  Returns (next-token logits [B,V] at each
+    slot's last packed token — garbage for slots with no tokens this call —
+    and the updated caches), so the caller samples every segment that
+    completed a row this tick: prefill-finishers and decoders alike.
 
     Attention masks by segment id (:func:`~repro.models.layers
-    .segment_attention`), so no token attends across requests; recurrent
-    blocks scatter the stream to the per-slot chunk layout and thread scan
-    state through the state-in/state-out kernels; MoE routes with the
-    packed ``valid`` mask.  Calling this repeatedly over a workload is
-    exact chunked prefill for every supported family, with a jit cache of
-    O(1) entries (one packed shape) instead of one per padded bucket."""
+    .segment_attention`, the fused Pallas kernel family), so no token
+    attends across requests — a length-1 decode segment sees exactly its
+    own slot's history plus itself, which is the decode-attention
+    predicate; recurrent blocks scatter the stream to the per-slot chunk
+    layout and thread scan state through the state-in/state-out kernels (a
+    length-1 segment is one scan step); MoE routes with the packed
+    ``valid`` mask.  Calling this repeatedly over a workload is exact
+    chunked prefill + decode for every supported family, with a jit cache
+    of O(1) entries (one packed shape) instead of one per padded bucket
+    plus a decode program."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
                          "does not support packed prefill")
@@ -568,6 +580,10 @@ def prefill_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
     xl = x[0, jnp.clip(last_idx, 0)][:, None, :]                 # [B,1,d]
     logits = _logits(cfg, params, xl)[:, 0]
     return logits, caches
+
+
+# prefill-only packed streams are the decode-segment-free special case
+prefill_packed = step_packed
 
 
 def decode_step(cfg, params, caches, token, pos, active=None,

@@ -10,9 +10,10 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from . import transformer
 
 __all__ = ["init", "loss_fn", "forward", "prefill", "prefill_chunk",
-           "prefill_packed", "supports_chunked_prefill", "supports_paged_kv",
-           "decode_step", "init_cache", "init_paged_cache",
-           "map_paged_caches", "make_batch", "input_specs"]
+           "prefill_packed", "step_packed", "supports_chunked_prefill",
+           "supports_paged_kv", "decode_step", "init_cache",
+           "init_paged_cache", "map_paged_caches", "make_batch",
+           "input_specs"]
 
 init = transformer.init
 loss_fn = transformer.loss_fn
@@ -20,6 +21,7 @@ forward = transformer.forward
 prefill = transformer.prefill
 prefill_chunk = transformer.prefill_chunk
 prefill_packed = transformer.prefill_packed
+step_packed = transformer.step_packed
 supports_chunked_prefill = transformer.supports_chunked_prefill
 supports_paged_kv = transformer.supports_paged_kv
 decode_step = transformer.decode_step

@@ -16,29 +16,43 @@ prefills (HB2149-style trade-off) by capping how many prompt tokens one
 prefill call may process before decode runs again.
 
 Hot path (one `tick`):
-  admission -> scheduling (slot + KV allocation) -> ONE prefill call (a
-  token-packed ragged stream, or a bucketed padded batch) advancing the
-  prefilling slots -> ONE fused decode step over all running slots ->
+  admission -> scheduling (slot + KV allocation) -> model compute:
+  **unified** (packed mode: ONE ``step_packed`` dispatch carrying prefill
+  chunks AND every running slot's decode token as a length-1 segment) or
+  **split** (bucketed/legacy: one prefill call + one fused decode step) ->
   completion/free -> controller updates.
 
 Hot-path design (the serving-perf tentpole):
-  * **Token-packed continuous batching** (``prefill_mode="packed"``, the
+  * **Unified prefill+decode ticks** (``prefill_mode="packed"``, the
     default for every text arch) — each tick fills a single
-    ``[1, packed_width]`` ragged stream with chunks from as many requests
-    as fit under the ``serve.prefill_chunk_tokens`` budget, regardless of
-    their natural length buckets: a new request's first chunk rides in the
-    same call as another request's later chunk.  Per-token ``slot_id`` /
-    ``position`` arrays plus per-slot segment boundaries carry the ragged
-    structure; attention masks by segment id so no request sees another,
-    and K/V scatter routes each token to its slot's dense ring row or
-    paged block (``prefill_packed``).  The knob is therefore the *literal*
-    per-tick token budget (a tick's true cost is ``<= prefill_chunk``
-    tokens, not ``bucket x n_slots``), the jit cache shrinks to one packed
-    shape under saturated demand (drain-tail ticks bucket down, so worst
-    case O(log cache_len) vs the bucketed path's per-(bucket, slot-count)
-    spread), and ``pad_fraction`` — dead tokens in the issued stream — is
-    observable per tick, so the SmartConf deputy for the knob tracks the
-    work actually done.
+    ``[1, width]`` ragged stream with prefill chunks from as many requests
+    as fit under the ``serve.prefill_chunk_tokens`` budget PLUS one
+    length-1 decode segment per running slot, all in admission order: the
+    steady-state tick costs ONE compiled dispatch instead of two.
+    (Decode-only ticks — the drain tail, where the split path never paid a
+    second dispatch — route to the specialized decode program: still one
+    dispatch, at that program's exact cost.)
+    Per-token ``slot_id`` / ``position`` arrays plus per-slot segment
+    boundaries carry the ragged structure; attention masks by segment id
+    so no request sees another (a decode segment sees exactly its own
+    history — the decode-attention predicate), and K/V scatter routes each
+    token to its slot's dense ring row or paged block (``step_packed``).
+    Sampling happens for every segment that completed a row this tick —
+    prefill-finishers and decoders alike — with a ``_gen_buf`` scatter by
+    slot.  Decode tokens are mandatory riders (the split path decodes
+    every running slot each tick, so parity demands the same here); they
+    count against the literal token budget, with prefill floored at one
+    token per tick so it can never be fully starved.  The knob is
+    therefore the *literal* per-tick token budget, the jit cache shrinks
+    to one packed shape under saturated demand (drain-tail ticks bucket
+    down, so worst case O(log cache_len) vs the bucketed path's
+    per-(bucket, slot-count) spread), and ``pad_fraction`` — dead lanes
+    per issued prefill lane — is observable per tick, so the SmartConf
+    deputy for the knob tracks the work actually done.  Attention runs on
+    the fused ``kernels/segment_attention`` family (online softmax over
+    K/V tiles, predicate fused into the tile mask), so the packed stream
+    never materializes the ``[P, B*N]`` score matrix that used to cap
+    ``packed_width``.
   * **Length-bucketed prefill** (``prefill_mode="bucketed"``) — prompt
     chunks are padded to power-of-two buckets and batched across slots
     into a single ``prefill_chunk`` call at engine batch width, so the jit
@@ -257,6 +271,12 @@ class ServeEngine:
         self._free_slots = collections.deque(range(max_batch))
         self.prefill_calls = 0
         self._prefill_shapes: set[int] = set()
+        # model-dispatch accounting: every jitted model call (prefill,
+        # decode, or unified step) counts one dispatch; the unified packed
+        # path collapses the steady-state tick to exactly one
+        self.model_dispatches = 0
+        self._tick_dispatches = 0
+        self._decode_dispatched = False
         # prefill padding telemetry (the serve.prefill_chunk_tokens deputy):
         # issued = token-positions the prefill calls computed, live = real
         # prompt tokens among them; pad_fraction = 1 - live/issued
@@ -301,15 +321,21 @@ class ServeEngine:
                 first, mode="drop")
             return c, tok, gbuf
 
-        def prefill_packed_fn(p, c, tokens, slot_id, pos, start, seg_len,
-                              done, tok, gbuf, bt):
-            logits, c = zoo.prefill_packed(cfg, p, c, tokens, slot_id, pos,
-                                           start, seg_len, block_tables=bt)
-            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tok = jnp.where(done, first, tok)
-            slot0 = jnp.where(done, 0, gbuf.shape[1])
-            gbuf = gbuf.at[jnp.arange(tok.shape[0]), slot0].set(
-                first, mode="drop")
+        def step_unified_fn(p, c, tokens, slot_id, pos, start, seg_len,
+                            is_dec, sample, gidx, tok, gbuf, bt):
+            # decode segments carry placeholder tokens in the host-built
+            # stream; fill them from the device-resident token ring so the
+            # deferred-host-sync invariant survives unification
+            safe = jnp.clip(slot_id, 0, max_batch - 1)
+            tokens = jnp.where(is_dec[None, :], tok[safe][None, :], tokens)
+            logits, c = zoo.step_packed(cfg, p, c, tokens, slot_id, pos,
+                                        start, seg_len, block_tables=bt)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # sample every segment that completed a row this tick:
+            # prefill-finishers (gidx == 0) and decoders (gidx == gen_count)
+            tok = jnp.where(sample, nxt, tok)
+            gbuf = gbuf.at[jnp.arange(tok.shape[0]), gidx].set(
+                nxt, mode="drop")
             return c, tok, gbuf
 
         def merge_fn(full, one, slot):
@@ -334,13 +360,20 @@ class ServeEngine:
         self._decode = jax.jit(decode_fn, donate_argnums=(1, 2, 5))
         self._prefill_chunk = jax.jit(prefill_chunk_fn,
                                       donate_argnums=(1, 6, 7))
-        self._prefill_packed = jax.jit(prefill_packed_fn,
-                                       donate_argnums=(1, 8, 9))
+        self._step_unified = jax.jit(step_unified_fn,
+                                     donate_argnums=(1, 10, 11))
         self._prefill = jax.jit(
             lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
         self._merge = jax.jit(merge_fn, donate_argnums=(0,))
 
-        # sensors (share the injected clock so tests can be deterministic)
+        # sensors (share the injected clock so tests can be deterministic).
+        # tick_latency spans the WHOLE tick (admit + schedule + compute +
+        # bookkeeping); decode_latency records only the model-compute span
+        # of ticks that advanced at least one decoding slot — the latency a
+        # decode token actually waited for, which is what the sc_chunk
+        # controller must attribute to its own knob (a long prefill sharing
+        # the tick inflates it; host-side admission work does not)
+        self.tick_latency = LatencySensor(clock=clock)
         self.decode_latency = LatencySensor(clock=clock)
         self.ttft = LatencySensor(clock=clock)
         self.throughput = ThroughputSensor(window_seconds=5.0, clock=clock)
@@ -401,25 +434,41 @@ class ServeEngine:
 
     @property
     def prefill_compiles(self) -> int:
-        """Distinct prefill programs compiled so far: one per padded bucket
-        width (fused) or per distinct prompt length (legacy).  Tracked by
-        input shape on the engine side (the jitted callables are per-engine
-        lambdas, so shape count == jit cache size) to avoid depending on
-        private jax cache introspection."""
+        """Distinct prefill/packed-stream programs compiled so far: one per
+        packed stream width (unified), per padded bucket width (bucketed),
+        or per distinct prompt length (legacy).  Tracked by input shape on
+        the engine side (the jitted callables are per-engine lambdas, so
+        shape count == jit cache size) to avoid depending on private jax
+        cache introspection."""
         return len(self._prefill_shapes)
+
+    @property
+    def model_programs(self) -> int:
+        """Total distinct compiled model programs serving the hot loop:
+        the prefill/packed-stream shapes plus the standalone decode
+        program.  Split-path engines (bucketed/legacy) dispatch the decode
+        program every running tick; a unified packed engine compiles it
+        only once drain (decode-only) ticks occur — mixed ticks fuse
+        decode into the stream dispatch."""
+        return len(self._prefill_shapes) + (1 if self._decode_dispatched
+                                            else 0)
 
     # ------------------------------------------------------------- one tick
     def tick(self) -> dict:
         t0 = self.clock()
         self._tick_issued = self._tick_live = 0
         self._tick_packed_segments = 0
+        self._tick_dispatches = 0
         self._update_controllers()
         self._admit()
         self._schedule()
-        self._prefill_tick()
-        n_tokens = self._decode_tick()
+        if self.prefill_impl == "packed":
+            n_tokens = self._tick_unified()
+        else:
+            self._prefill_tick()
+            n_tokens = self._decode_tick()
         self._finish()
-        self.decode_latency.record(self.clock() - t0)
+        self.tick_latency.record(self.clock() - t0)
         return {
             "queued": len(self.queued),
             "running": len(self.running) + len(self.prefilling),
@@ -432,6 +481,9 @@ class ServeEngine:
             "pad_fraction": (1.0 - self._tick_live / self._tick_issued
                              if self._tick_issued else 0.0),
             "packed_segments": self._tick_packed_segments,
+            # jitted model calls this tick: the unified packed path costs
+            # exactly one; split paths cost up to two (prefill + decode)
+            "dispatches": self._tick_dispatches,
             # pool-pressure sensors (budget-vs-occupancy, bench_serving)
             "kv_used_blocks": self.pool.used_blocks,
             "kv_budget_blocks": self.pool.max_blocks,
@@ -583,10 +635,7 @@ class ServeEngine:
     def _prefill_tick(self) -> None:
         if not self.prefilling:
             return
-        if self.prefill_impl == "packed":
-            self._prefill_tick_packed()
-        else:
-            self._prefill_tick_bucketed()
+        self._prefill_tick_bucketed()
 
     def _record_prefill_pad(self, issued: int, live: int, segments: int):
         """Accumulates per tick: legacy mode prefills once per admitted
@@ -601,41 +650,67 @@ class ServeEngine:
     def pad_fraction(self) -> float:
         """Cumulative padded-but-dead fraction of all prefill tokens issued:
         the gap between what ``serve.prefill_chunk_tokens`` claims to spend
-        and the prompt tokens actually advanced (near-zero under packing)."""
-        return 1.0 - self.prefill_live_tokens / max(
-            1, self.prefill_issued_tokens)
+        and the prompt tokens actually advanced (near-zero under packing).
+        An engine that has issued zero prefill tokens has no padding to
+        report — 0.0, not the 1.0 the old ``1 - 0/max(1, 0)`` produced."""
+        if self.prefill_issued_tokens == 0:
+            return 0.0
+        return 1.0 - self.prefill_live_tokens / self.prefill_issued_tokens
 
-    # ------------------------------------------- token-packed ragged prefill
-    def _prefill_tick_packed(self) -> None:
-        """Fill ONE ``[1, width]`` ragged stream with chunks from as many
-        prefilling requests as fit under the live
-        ``serve.prefill_chunk_tokens`` budget — across natural buckets, in
-        admission order — and advance them all in a single call.
+    # --------------------------------------- unified prefill+decode stream
+    def _tick_unified(self) -> int:
+        """ONE ``step_packed`` dispatch advances the whole engine: prefill
+        chunks from as many prefilling requests as fit under the live
+        ``serve.prefill_chunk_tokens`` budget PLUS one length-1 decode
+        segment per running slot, all packed into a single ``[1, width]``
+        ragged stream in admission order.
 
-        The stream width is the power-of-two bucket of
-        ``min(demand, budget)`` capped at ``packed_width``: whenever demand
-        saturates the budget (the steady state under load) every tick
-        reuses ONE compiled shape, and drain-tail ticks shrink to narrow
-        shapes instead of issuing a mostly-dead full-width stream — so
-        ``pad_fraction`` measures quantization waste, not idle capacity."""
+        Decode tokens are mandatory riders — the split path decodes every
+        running slot each tick, so token parity demands the same here —
+        and they count against the literal token budget; prefill keeps a
+        floor of one token per tick so a full decode batch can never
+        starve it into livelock.  The stream width is the power-of-two
+        bucket of the packed token count: whenever demand saturates the
+        budget (the steady state under load) every tick reuses ONE
+        compiled shape, and drain-tail ticks shrink to narrow shapes
+        instead of issuing a mostly-dead full-width stream.  Returns the
+        number of tokens generated this tick (decoders + prefill
+        finishers, each of which samples from the same dispatch).
+
+        A tick with no prefill work has nothing to fuse: it routes to the
+        specialized decode program instead of padding decode tokens into a
+        mostly-dead stream — still one dispatch (the split path never paid
+        two on decode-only ticks either), at the decode program's exact
+        cost.  The unified stream owns every tick where prefill and decode
+        overlap, which is where the split path paid its second dispatch."""
+        if not self.prefilling:
+            return self._decode_tick()
+        n_dec = len(self.running)
         budget = max(1, min(int(self.prefill_chunk), self.packed_width))
         demand = sum(len(r.prompt) - r.prefilled
                      for r in self.prefilling.values())
-        width = min(self.packed_width, _bucket(min(demand, budget)))
-        budget = min(budget, width)
+        pre_budget = min(max(1, budget - n_dec), demand)
+        # the engine's one documented width cap still applies: a saturated
+        # stream on a non-power-of-two cache_len must issue packed_width
+        # lanes, not the next power of two's permanently-dead padding
+        width = min(_bucket(pre_budget + n_dec), self.packed_width)
+        width = max(width, pre_budget + n_dec)   # never truncate the stream
         tokens = np.zeros((1, width), np.int32)
         slot_id = np.full((width,), -1, np.int32)
         posw = np.zeros((width,), np.int32)
         start = np.zeros((self.max_batch,), np.int32)
         seg_len = np.zeros((self.max_batch,), np.int32)
+        is_dec = np.zeros((width,), bool)
+        sample = np.zeros((self.max_batch,), bool)
+        gidx = np.full((self.max_batch,), self.cache_len, np.int32)
         done = np.zeros((self.max_batch,), bool)
         cursor = 0
         packed: list[tuple[int, Request, int]] = []
         for slot, req in sorted(self.prefilling.items(),
                                 key=lambda sr: sr[1].admit_seq):
-            if cursor >= budget:
+            if cursor >= pre_budget:
                 break   # later arrivals re-pack from `prefilled` next tick
-            n = min(len(req.prompt) - req.prefilled, budget - cursor)
+            n = min(len(req.prompt) - req.prefilled, pre_budget - cursor)
             tokens[0, cursor:cursor + n] = \
                 req.prompt[req.prefilled:req.prefilled + n]
             slot_id[cursor:cursor + n] = slot
@@ -643,21 +718,49 @@ class ServeEngine:
                                                 req.prefilled + n)
             start[slot] = req.prefilled
             seg_len[slot] = n
-            done[slot] = req.prefilled + n >= len(req.prompt)
+            if req.prefilled + n >= len(req.prompt):
+                done[slot] = sample[slot] = True
+                gidx[slot] = 0               # first token -> gen ring head
             packed.append((slot, req, n))
             cursor += n
-        self.caches, self._slot_tok, self._gen_buf = self._prefill_packed(
+        pre_cursor = cursor
+        decoders: list[tuple[int, Request]] = []
+        for slot, req in sorted(self.running.items(),
+                                key=lambda sr: sr[1].admit_seq):
+            # the decode token itself lives on device (_slot_tok); the
+            # stream carries a placeholder the jitted step fills in
+            slot_id[cursor] = slot
+            posw[cursor] = int(self.slot_pos[slot])
+            is_dec[cursor] = True
+            start[slot] = int(self.slot_pos[slot])
+            seg_len[slot] = 1
+            sample[slot] = True
+            gidx[slot] = min(req.gen_count, self.cache_len)  # ==len => drop
+            decoders.append((slot, req))
+            cursor += 1
+        t_disp = self.clock()
+        self.caches, self._slot_tok, self._gen_buf = self._step_unified(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(slot_id), jnp.asarray(posw), jnp.asarray(start),
-            jnp.asarray(seg_len), jnp.asarray(done), self._slot_tok,
-            self._gen_buf, self._bt() if self.paged else None)
-        self.prefill_calls += 1
+            jnp.asarray(seg_len), jnp.asarray(is_dec), jnp.asarray(sample),
+            jnp.asarray(gidx), self._slot_tok, self._gen_buf,
+            self._bt() if self.paged else None)
+        self.model_dispatches += 1
+        self._tick_dispatches += 1
         self._prefill_shapes.add(width)        # O(1): one packed shape
-        self._record_prefill_pad(width, cursor, len(packed))
-        if done.any():
-            # a first token is a completion boundary: wait for the device
-            # (no host transfer) so TTFT reflects compute, not dispatch
+        if packed:
+            self.prefill_calls += 1
+            # the prefill-knob deputy counts prefill lanes only: decode
+            # riders are always live and not governed by the knob
+            self._record_prefill_pad(width - n_dec, pre_cursor, len(packed))
+        self._tick_packed_segments += n_dec
+        if n_dec or done.any():
+            # a sampled token is a completion boundary: wait for the device
+            # (no host transfer) so TTFT/decode latency reflect compute,
+            # not async dispatch depth
             self._slot_tok.block_until_ready()
+        if n_dec:
+            self.decode_latency.record(self.clock() - t_disp)
         now = self.clock()
         for slot, req, n in packed:
             req.prefilled += n
@@ -669,6 +772,13 @@ class ServeEngine:
                     self.ttft.record(now - req.submitted_t)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
+        for slot, req in decoders:
+            self.slot_pos[slot] += 1
+            req.gen_count += 1
+        n_tokens = n_dec + int(done.sum())
+        if n_tokens:
+            self.throughput.record(n_tokens)
+        return n_tokens
 
     # ----------------------------------------------- bucketed chunked prefill
     def _prefill_tick_bucketed(self) -> None:
@@ -694,6 +804,8 @@ class ServeEngine:
             self._slot_tok, self._gen_buf,
             self._bt() if self.paged else None)
         self.prefill_calls += 1
+        self.model_dispatches += 1
+        self._tick_dispatches += 1
         self._prefill_shapes.add(width)
         self._record_prefill_pad(width * len(self.prefilling),
                                  int(lengths.sum()),
@@ -735,6 +847,8 @@ class ServeEngine:
         self.caches = self._merge(self.caches, one_cache,
                                   jnp.asarray(req.slot, jnp.int32))
         self.prefill_calls += 1
+        self.model_dispatches += 1
+        self._tick_dispatches += 1
         self._prefill_shapes.add(len(req.prompt))
         self._record_prefill_pad(len(req.prompt), len(req.prompt), 1)
         first = int(jnp.argmax(logits[0]))
@@ -758,14 +872,19 @@ class ServeEngine:
             active[slot] = True
             gidx[slot] = min(req.gen_count, self.cache_len)  # ==len => drop
         pos = jnp.asarray(np.maximum(self.slot_pos, 0).astype(np.int32))
-        self._slot_tok, self.caches, self._gen_buf = self._decode(
-            self.params, self.caches, self._slot_tok, pos,
-            jnp.asarray(active), self._gen_buf, jnp.asarray(gidx),
-            self._bt() if self.paged else None)
-        # wait for device compute (still no host transfer) so the tick
-        # latency sensor — and the sc_chunk controller acting on its p99 —
-        # measures real decode time, not async dispatch depth
-        self._slot_tok.block_until_ready()
+        # the decode-only latency sensor wraps just the dispatch + device
+        # wait (no host transfer): the sc_chunk controller acting on its
+        # p99 sees real decode compute, not admission/scheduling host work
+        # (that whole-tick span is tick_latency's job)
+        with self.decode_latency.measure():
+            self._slot_tok, self.caches, self._gen_buf = self._decode(
+                self.params, self.caches, self._slot_tok, pos,
+                jnp.asarray(active), self._gen_buf, jnp.asarray(gidx),
+                self._bt() if self.paged else None)
+            self._slot_tok.block_until_ready()
+        self.model_dispatches += 1
+        self._tick_dispatches += 1
+        self._decode_dispatched = True
         n = 0
         for slot, req in self.running.items():
             self.slot_pos[slot] += 1

@@ -257,6 +257,10 @@ def test_bench_serving_smoke():
     names = {r.split(",")[0] for r in rows}
     assert {"serving_prefill_legacy", "serving_prefill_bucketed",
             "serving_prefill_packed", "serving_packed_vs_bucketed",
+            # unified prefill+decode ticks: dispatches/tick and the
+            # fused-vs-split decode throughput comparison
+            "serving_unified_ticks", "serving_decode_unified_vs_split",
+            "serving_e2e_unified_vs_split",
             "serving_decode_paged", "serving_decode_dense",
             "serving_kv_budget_cut_paged",
             "serving_kv_budget_cut_dense",

@@ -1,0 +1,150 @@
+"""Fused segment-attention kernel family vs. the ref oracle, and the
+dead-pad-lane contract.
+
+The correctness bar for the unified-tick path: the Pallas kernels (run in
+interpreter mode on CPU) must match ``ref.py`` on EVERY lane — live and
+dead — over ragged segment mixes, GQA/MQA head layouts, sliding windows
+(the gemma3 swa kind), bf16 streams, and out-of-order / holey paged block
+tables.  Exact all-lane parity is only possible because fully-masked
+queries emit exact zeros instead of a garbage uniform softmax (the
+sensor-honesty satellite on ``layers.segment_attention``)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.segment_attention import (
+    paged_segment_attention, paged_segment_attention_ref,
+    segment_attention, segment_attention_ref, segment_attention_op)
+from repro.models import layers
+
+
+def _ragged_stream(rng, p, n, n_seg, max_pos=64):
+    """Packed-ABI tags: contiguous query segments (with a dead tail) and
+    shuffled keys carrying (pos, seg) pairs, some unwritten (-1)."""
+    q_seg = np.full((p,), -1, np.int32)
+    q_pos = np.zeros((p,), np.int32)
+    cursor = 0
+    for s in range(n_seg):
+        ln = int(rng.integers(1, max(2, (p - cursor) // max(1, n_seg - s))))
+        if cursor + ln > p:
+            break
+        start = int(rng.integers(0, max_pos - ln))
+        q_seg[cursor:cursor + ln] = s
+        q_pos[cursor:cursor + ln] = np.arange(start, start + ln)
+        cursor += ln
+    k_seg = rng.integers(-1, n_seg, n).astype(np.int32)
+    k_pos = rng.integers(-1, max_pos, n).astype(np.int32)
+    return (jnp.asarray(q_pos), jnp.asarray(q_seg),
+            jnp.asarray(k_pos), jnp.asarray(k_seg))
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (4, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("window", [0, 9])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_kernel_matches_ref(rng, h, kv, window, dtype):
+    p, n, d = 37, 101, 16
+    q = jnp.asarray(rng.standard_normal((p, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((n, kv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((n, kv, d)), dtype)
+    q_pos, q_seg, k_pos, k_seg = _ragged_stream(rng, p, n, 3)
+    ref = segment_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                                window=window)
+    got = segment_attention(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                            window=window, block_q=16, block_k=32,
+                            interpret=True)
+    # all-lane comparison: dead lanes are exact zeros on both sides
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < tol, f"h={h} kv={kv} w={window}: {err:.2e}"
+    dead = np.asarray(q_seg) < 0
+    assert dead.any()
+    assert (np.asarray(ref, np.float32)[dead] == 0.0).all()
+    assert (np.asarray(got, np.float32)[dead] == 0.0).all()
+
+
+def test_segment_kernel_fully_masked_live_lane(rng):
+    """A live lane whose predicate admits no key (nothing written yet) must
+    also emit exact zeros — kernel and oracle alike."""
+    p, n, h, d = 8, 16, 2, 8
+    q = jnp.asarray(rng.standard_normal((p, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((n, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, h, d)), jnp.float32)
+    q_pos = jnp.arange(p, dtype=jnp.int32)
+    q_seg = jnp.zeros((p,), jnp.int32)
+    k_pos = jnp.full((n,), -1, jnp.int32)        # nothing written
+    k_seg = jnp.zeros((n,), jnp.int32)
+    ref = segment_attention_ref(q, k, v, q_pos, k_pos, q_seg, k_seg)
+    got = segment_attention(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                            interpret=True)
+    assert (np.asarray(ref) == 0.0).all()
+    assert (np.asarray(got) == 0.0).all()
+
+
+@pytest.mark.parametrize("window", [0, 11])
+def test_paged_segment_kernel_out_of_order_tables(rng, window):
+    """Out-of-order physical blocks and -1 holes: only the table gives the
+    store meaning; the scalar-prefetch gather must agree with the
+    materialized-view oracle."""
+    p, h, kv, d = 29, 4, 2, 16
+    b, m, t = 3, 4, 8
+    nb = b * m + 2                               # spare blocks stay unused
+    q = jnp.asarray(rng.standard_normal((p, h, d)), jnp.float32)
+    ks = jnp.asarray(rng.standard_normal((nb, kv, t, d)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((nb, kv, t, d)), jnp.float32)
+    perm = rng.permutation(nb)[:b * m].astype(np.int32).reshape(b, m)
+    perm[1, 3] = -1                              # unallocated hole
+    perm[2, 2] = -1
+    q_seg = jnp.asarray(rng.integers(-1, b, p), jnp.int32)
+    q_pos = jnp.asarray(rng.integers(0, m * t, p), jnp.int32)
+    tables = jnp.asarray(perm)
+    ref = paged_segment_attention_ref(q, ks, vs, tables, q_pos, q_seg,
+                                      window=window)
+    got = paged_segment_attention(q, ks, vs, tables, q_pos, q_seg,
+                                  window=window, block_q=8, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    assert err < 2e-5, f"w={window}: {err:.2e}"
+
+
+def test_layers_segment_attention_zeroes_dead_lanes(rng):
+    """The XLA twin in models.layers must zero dead pad lanes too (the
+    bugfix satellite): uniform softmax over -1e30 scores previously emitted
+    garbage on lanes no caller may read — which made exact XLA-vs-Pallas
+    parity impossible."""
+    p, n, h, d = 12, 24, 2, 8
+    for dtype in (jnp.float32, jnp.bfloat16):
+        q = jnp.asarray(rng.standard_normal((1, p, h, d)), dtype)
+        k = jnp.asarray(rng.standard_normal((1, n, h, d)), dtype)
+        v = jnp.asarray(rng.standard_normal((1, n, h, d)), dtype)
+        q_seg = np.zeros((p,), np.int32)
+        q_seg[7:] = -1                           # dead tail
+        q_pos = np.arange(p, dtype=np.int32)
+        k_seg = np.zeros((n,), np.int32)
+        k_pos = np.arange(n, dtype=np.int32)
+        out = layers.segment_attention(
+            q, k, v, q_pos=jnp.asarray(q_pos)[None],
+            k_pos=jnp.asarray(k_pos)[None], q_seg=jnp.asarray(q_seg)[None],
+            k_seg=jnp.asarray(k_seg)[None])
+        assert (np.asarray(out, np.float32)[0, 7:] == 0.0).all(), dtype
+
+
+def test_segment_op_env_dispatch(rng, monkeypatch):
+    """REPRO_SEGMENT_IMPL routes the op between the oracle and the
+    interpreted kernel; both agree on live lanes."""
+    p, n, h, d = 16, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((p, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((n, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, h, d)), jnp.float32)
+    q_pos, q_seg, k_pos, k_seg = _ragged_stream(rng, p, n, 2)
+    outs = {}
+    for impl in ("xla", "pallas_interpret"):
+        monkeypatch.setenv("REPRO_SEGMENT_IMPL", impl)
+        outs[impl] = segment_attention_op(q, k, v, q_pos, k_pos, q_seg,
+                                          k_seg)
+    err = float(jnp.max(jnp.abs(outs["xla"] - outs["pallas_interpret"])))
+    assert err < 2e-5
+    monkeypatch.setenv("REPRO_SEGMENT_IMPL", "bogus")
+    with pytest.raises(ValueError, match="kernel impl"):
+        segment_attention_op(q, k, v, q_pos, k_pos, q_seg, k_seg)

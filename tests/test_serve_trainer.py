@@ -146,6 +146,78 @@ def test_engine_clock_injectable_deterministic_ttft(small_model, rng):
     eng.close()
 
 
+def test_fresh_engine_reports_zero_pad_fraction(small_model):
+    """An engine that has issued zero prefill tokens has no padding: the
+    cumulative property must report 0.0, not the 1.0 that
+    ``1 - 0/max(1, 0)`` produced (the per-tick stat always guarded this;
+    the cumulative one did not)."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=32,
+                      enable_smartconf=False)
+    assert eng.pad_fraction == 0.0
+    eng.tick()                       # idle tick: still nothing issued
+    assert eng.pad_fraction == 0.0
+    eng.close()
+
+
+def test_tick_vs_decode_latency_split(small_model, rng):
+    """The sensor named ``decode_latency`` must record only the
+    model-compute span of ticks that advanced a decoder — not the whole
+    tick (admit + schedule + prefill + host bookkeeping) it used to record.
+    ``tick_latency`` now carries the whole-tick span.  Mandatory once
+    prefill and decode share one dispatch: ``sc_chunk`` acts on
+    ``decode_latency.p99()``, and a controller cannot attribute latency to
+    its own knob if the sensor mixes in admission work."""
+    cfg, params = small_model
+    t = [0.0]
+
+    def clock():                     # strictly increasing fake clock
+        t[0] += 1.0
+        return t[0]
+
+    for mode in ("packed", "bucketed"):
+        eng = ServeEngine(cfg, params, max_batch=1, cache_len=96,
+                          enable_smartconf=False, prefill_mode=mode,
+                          clock=clock)
+        eng.prefill_chunk = 8
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 24)
+                           .astype(np.int32), 3))
+        eng.tick()                   # pure prefill: no decoder advanced
+        assert eng.tick_latency.count() == 1, mode
+        assert eng.decode_latency.count() == 0, mode
+        while len(eng.finished) < 1:
+            eng.tick()
+        # decode ticks record both; the whole-tick span always covers the
+        # model-compute span (more clock reads inside the tick)
+        assert eng.decode_latency.count() > 0, mode
+        assert eng.tick_latency.count() > eng.decode_latency.count(), mode
+        assert eng.tick_latency.max() >= eng.decode_latency.max(), mode
+        eng.close()
+
+
+def test_throughput_sensor_partial_window_rate():
+    """Events/sec must divide by the elapsed span while the window is
+    still filling (bench warm-up, short smoke runs under-reported before),
+    clamp to the window once full, and survive the single-instant
+    degenerate case without dividing by zero."""
+    from repro.core.sensors import ThroughputSensor
+    t = [0.0]
+    s = ThroughputSensor(window_seconds=5.0, clock=lambda: t[0])
+    assert s.rate() == 0.0                       # no events at all
+    s.record(10)
+    assert s.rate() == 10 / 5.0                  # zero span: conservative
+    t[0] = 2.0
+    s.record(10)
+    assert s.rate() == 20 / 2.0                  # partial window: honest
+    t[0] = 4.0
+    assert s.rate() == 20 / 4.0
+    t[0] = 7.0                                   # first event leaves window
+    s.record(10)
+    assert s.rate() == 20 / 5.0                  # clamped at window_seconds
+    t[0] = 20.0
+    assert s.rate() == 0.0                       # everything trimmed
+
+
 def test_latency_sensor_measure_uses_injected_clock():
     from repro.core.sensors import LatencySensor
     t = [0.0]

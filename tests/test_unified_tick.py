@@ -1,0 +1,129 @@
+"""Unified prefill+decode ticks: ONE ``step_packed`` dispatch per tick
+carries prefill chunks AND every running slot's decode token as a length-1
+segment.  The correctness bar is engine-level token identity against the
+split prefill/decode path (bucketed = split chunked oracle, legacy =
+one-shot oracle) for every text arch, dense AND paged KV — plus the
+dispatch-count contract the tentpole exists for: steady-state ticks cost
+exactly one compiled dispatch instead of two."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import zoo
+from repro.serve import Request, ServeEngine
+
+PROMPT_LENS = (5, 19, 33)
+MAX_NEW = 4
+
+
+def _smoke_cfg(arch_id):
+    cfg = reduced(get_config(arch_id))
+    if cfg.moe:   # ample capacity -> deterministic routing for equivalence
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+def _run(cfg, params, prompts, mode, kv_mode="auto", chunk=16, max_batch=2,
+         cache_len=96):
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
+                      enable_smartconf=False, prefill_mode=mode,
+                      kv_mode=kv_mode)
+    eng.prefill_chunk = chunk
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, MAX_NEW))
+    ticks = max_dispatches = 0
+    dispatch_ticks = 0
+    while len(eng.finished) < len(prompts) and ticks < 400:
+        st = eng.tick()
+        ticks += 1
+        max_dispatches = max(max_dispatches, st["dispatches"])
+        dispatch_ticks += st["dispatches"]
+    assert len(eng.finished) == len(prompts), (cfg.name, mode)
+    outs = {r.req_id: list(r.generated) for r in eng.finished}
+    stats = dict(max_dispatches=max_dispatches,
+                 dispatches_per_tick=dispatch_ticks / ticks,
+                 programs=eng.model_programs, paged=eng.paged)
+    eng.close()
+    return outs, stats
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ARCH_IDS
+                                     if a not in ("whisper-tiny",
+                                                  "internvl2-1b")])
+def test_unified_matches_split_every_text_arch(arch_id, rng):
+    """All 8 text archs: the unified packed engine (kv auto: paged where
+    supported) generates token-identical output to the split bucketed
+    engine, with at most ONE model dispatch per tick (vs. the split
+    path's two)."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in PROMPT_LENS]
+    split, split_st = _run(cfg, params, prompts, "bucketed")
+    unified, uni_st = _run(cfg, params, prompts, "packed")
+    assert split == unified, arch_id
+    assert uni_st["max_dispatches"] == 1
+    assert split_st["max_dispatches"] == 2       # prefill + decode ticks
+    assert uni_st["dispatches_per_tick"] <= split_st["dispatches_per_tick"]
+
+
+@pytest.mark.parametrize("arch_id", ["yi-6b", "gemma3-4b",
+                                     "deepseek-moe-16b"])
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+def test_unified_matches_one_shot_dense_and_paged(arch_id, kv_mode, rng):
+    """Explicit dense AND paged KV against the one-shot legacy oracle —
+    including the windowed gemma3 local layers and MoE routing riding the
+    fused paged segment kernel's write-then-attend path."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in PROMPT_LENS]
+    legacy, _ = _run(cfg, params, prompts, "legacy", kv_mode="dense")
+    unified, st = _run(cfg, params, prompts, "packed", kv_mode=kv_mode)
+    assert legacy == unified, (arch_id, kv_mode)
+    assert st["paged"] == (kv_mode == "paged")
+    assert st["max_dispatches"] == 1
+
+
+def test_unified_fuses_decode_program(rng):
+    """Mixed ticks fuse decode into the stream dispatch, so the unified
+    engine's total program count never exceeds the split engine's (both
+    may compile the standalone decode program — unified only for the
+    decode-only drain tail, split for every running tick)."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, 21).astype(np.int32)]
+    _, uni = _run(cfg, params, prompts, "packed")
+    _, spl = _run(cfg, params, prompts, "bucketed")
+    assert uni["programs"] <= spl["programs"]
+    assert uni["max_dispatches"] == 1 and spl["max_dispatches"] == 2
+
+
+def test_unified_decode_rides_budget_but_never_starves_prefill(rng):
+    """Decode riders count against the literal token budget, but prefill
+    keeps a one-token floor: with budget == 1 and a full decode batch the
+    prefilling request still advances every tick (no livelock)."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    short = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      enable_smartconf=False, prefill_mode="packed")
+    eng.prefill_chunk = 1
+    eng.submit(Request(0, short, 30))
+    for _ in range(8):
+        eng.tick()                    # short req is decoding by now
+    assert len(eng.running) == 1
+    eng.submit(Request(1, long, 2))
+    req = eng.waiting[0]
+    ticks = 0
+    while req.prefilled < len(long) and ticks < 40:
+        eng.tick()
+        ticks += 1
+    assert req.prefilled == len(long), "prefill starved by decode riders"
+    assert req.prefill_chunks == len(long)   # one-token floor per tick
+    eng.close()
