@@ -35,11 +35,11 @@ def _sections():
     from benchmarks import (bench_alternatives, bench_casestudy,
                             bench_compression, bench_interacting,
                             bench_overhead, bench_roofline, bench_serving,
-                            bench_tradeoff)
+                            bench_slo, bench_tradeoff)
 
     mods = (bench_tradeoff, bench_casestudy, bench_alternatives,
             bench_interacting, bench_overhead, bench_compression,
-            bench_serving, bench_roofline)
+            bench_serving, bench_slo, bench_roofline)
     return {m.__name__.rsplit(".", 1)[-1]: m for m in mods}
 
 

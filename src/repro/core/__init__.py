@@ -22,6 +22,7 @@ from .controller import (
 from .smartconf import (
     ConfRegistry,
     GLOBAL_REGISTRY,
+    Guardrails,
     SmartConf,
     SmartConfIndirect,
     Transducer,
@@ -42,8 +43,8 @@ from . import ablations, jax_controller, simenv
 __all__ = [
     "ControllerModel", "GoalSpec", "SmartController",
     "compute_pole", "compute_virtual_goal", "fit_model",
-    "ConfRegistry", "GLOBAL_REGISTRY", "SmartConf", "SmartConfIndirect",
-    "Transducer", "parse_goals_file", "parse_sys_file",
+    "ConfRegistry", "GLOBAL_REGISTRY", "Guardrails", "SmartConf",
+    "SmartConfIndirect", "Transducer", "parse_goals_file", "parse_sys_file",
     "ProfileBuffer", "read_sysfile", "synthesize", "write_sysfile",
     "HBMAccountant", "LatencySensor", "QueueGauge", "StepTimer",
     "ThroughputSensor", "device_live_bytes",

@@ -32,6 +32,8 @@ written by ``core.profiler``).
 
 from __future__ import annotations
 
+import dataclasses
+import math
 import os
 import threading
 import warnings
@@ -42,12 +44,51 @@ from . import profiler
 
 __all__ = [
     "Transducer",
+    "Guardrails",
     "SmartConf",
     "SmartConfIndirect",
     "ConfRegistry",
     "parse_sys_file",
     "parse_goals_file",
 ]
+
+
+@dataclasses.dataclass
+class Guardrails:
+    """Deployment guardrails wrapped around one PerfConf's control loop.
+
+    The paper's controller assumes honest sensors and a plant that tolerates
+    any actuation inside ``[conf_min, conf_max]``.  Production serving breaks
+    both assumptions: sensors drop out or return NaN under faults, and a
+    controller stepping a knob by 10x in one interval can destabilize the
+    system it is meant to protect.  Three guards, all off by default:
+
+    * **Sensor sanity** (``perf_lo`` / ``perf_hi``) — a reading that is
+      non-finite or outside the plausible range is *rejected*: it never
+      reaches Eq. 2, so one NaN cannot poison the integrator.  Each
+      rejection counts in :attr:`SmartConf.sensor_faults`.
+    * **Fallback to last-known-good** (``fault_tolerance``) — after this
+      many *consecutive* insane readings the sensor is declared failed and
+      the configuration pins to the last value computed from a sane reading
+      (or the explicit ``fallback`` static setting).  Control resumes, from
+      that value, on the first sane reading.
+    * **Actuation slew clamp + anti-windup** (``max_step``) — one actuation
+      may move the configuration by at most ``max_step`` (absolute, in conf
+      units).  The clamped value is written back into the controller state,
+      so the error integral never winds up beyond what was actually applied
+      (the same back-calculation the actuator bounds already get via
+      ``_emit``).  Clamped actuations count in
+      :attr:`SmartConf.clamped_actuations`.
+    """
+
+    max_step: float | None = None
+    perf_lo: float = float("-inf")
+    perf_hi: float = float("inf")
+    fault_tolerance: int = 3
+    fallback: float | None = None
+
+    def sane(self, value: float) -> bool:
+        return math.isfinite(value) and self.perf_lo <= value <= self.perf_hi
 
 
 class Transducer:
@@ -171,11 +212,17 @@ class SmartConf:
         model: ControllerModel | None = None,
         profiling: bool = False,
         registry: ConfRegistry | None = None,
+        guardrails: Guardrails | None = None,
     ) -> None:
         self.conf_name = conf_name
         self.sys_dir = sys_dir
         self.registry = registry if registry is not None else GLOBAL_REGISTRY
         self.profiling = profiling
+        self.guardrails = guardrails
+        self.sensor_faults = 0           # insane readings rejected, total
+        self.clamped_actuations = 0      # slew-clamped get_conf calls
+        self._consec_faults = 0
+        self._sensor_failed = False
 
         # Resolve mapping + initial value from SmartConf.sys when on disk.
         if sys_dir is not None:
@@ -207,22 +254,85 @@ class SmartConf:
                 )
             model = ControllerModel(alpha=1.0)  # placeholder during profiling
         self._controller = SmartController(model, goal, initial)
+        # last configuration value computed from a sane reading: where the
+        # guardrails pin the knob when the sensor is declared failed
+        self._last_good_conf = float(initial)
         self._profile_buffer = (
             profiler.ProfileBuffer(sys_dir, conf_name) if (profiling and sys_dir) else None
         )
         self._profile_mem: list[tuple[float, float]] = []
         self.registry.register(self)
 
+    # ------------------------------------------------------------ guardrails
+    def _admit_reading(self, actual: float) -> bool:
+        """Sensor-sanity gate: True if the reading may reach the controller.
+        Insane readings (NaN/inf/out-of-range) are dropped; after
+        ``fault_tolerance`` consecutive drops the knob pins to the
+        last-known-good value until a sane reading arrives."""
+        g = self.guardrails
+        if g is None:
+            return True
+        if not g.sane(float(actual)):
+            self.sensor_faults += 1
+            self._consec_faults += 1
+            if self._consec_faults >= max(1, g.fault_tolerance):
+                self._sensor_failed = True
+            return False
+        if self._sensor_failed:
+            # resume control FROM the pinned value, not from wherever the
+            # integrator drifted while blind (anti-windup across the outage)
+            self._controller._conf = self._pinned_conf()
+        self._consec_faults = 0
+        self._sensor_failed = False
+        return True
+
+    def _pinned_conf(self) -> float:
+        g = self.guardrails
+        fb = g.fallback if (g is not None and g.fallback is not None) \
+            else self._last_good_conf
+        lo, hi = self._controller.model.conf_min, self._controller.model.conf_max
+        return min(max(float(fb), lo), hi)
+
+    def _apply_guards(self, value: float) -> float:
+        g = self.guardrails
+        if g is None:
+            return value
+        if self._sensor_failed:
+            return self._pinned_conf()
+        if g.max_step is not None:
+            prev = self._last_good_conf
+            clamped = min(max(value, prev - g.max_step), prev + g.max_step)
+            if clamped != value:
+                self.clamped_actuations += 1
+                # anti-windup: the controller must integrate from the value
+                # actually applied, not the one it asked for
+                self._controller._conf = clamped
+            value = clamped
+        self._last_good_conf = float(value)
+        return value
+
+    @property
+    def sensor_failed(self) -> bool:
+        """True while the guardrails hold the knob at last-known-good
+        because the sensor keeps returning insane readings."""
+        return self._sensor_failed
+
     # ------------------------------------------------------------------ API
     def set_perf(self, actual: float) -> None:
         """Feed the latest performance measurement to the controller."""
+        if not self._admit_reading(actual):
+            return
         if self.profiling:
             self._record_sample(self._controller.conf, actual)
         self._controller.observe(actual)
 
     def get_conf(self) -> float:
         """Compute the adjusted configuration value (Eq. 2 machinery)."""
-        value = self._controller.actuate()
+        if self._sensor_failed:
+            value = self._pinned_conf()
+            self._controller._conf = value
+        else:
+            value = self._apply_guards(self._controller.actuate())
         if self._controller.goal_unreachable:
             warnings.warn(
                 f"SmartConf[{self.conf_name}]: goal {self.goal.value} on "
@@ -255,6 +365,19 @@ class SmartConf:
     def force_conf(self, value: float) -> None:
         """Pin the configuration (used by the profiler to sweep values)."""
         self._controller._conf = float(value)
+
+    def clamp_conf_max(self, value: float) -> None:
+        """Shrink the actuation ceiling mid-run (capacity loss: a chaos
+        budget cut, a neighbour claiming HBM).  The controller keeps
+        running against the smaller range; current and last-known-good
+        values are pulled inside it so the next actuation cannot bounce
+        back above the new ceiling."""
+        model = self._controller.model
+        model.conf_max = float(value)
+        if self._controller._conf > model.conf_max:
+            self._controller._conf = model.conf_max
+        if self._last_good_conf > model.conf_max:
+            self._last_good_conf = model.conf_max
 
     def finish_profiling(
         self, *, conf_min: float = 0.0, conf_max: float = float("inf"),
@@ -333,6 +456,17 @@ class SmartConfIndirect(SmartConf):
     def set_perf(self, actual: float, deputy: float | None = None) -> None:  # type: ignore[override]
         if deputy is None:
             raise TypeError("SmartConfIndirect.set_perf requires the deputy's current value")
+        if not math.isfinite(float(deputy)):
+            # a corrupted deputy is a sensor fault even when the metric
+            # reading itself is sane: Eq. 2 integrates from the deputy
+            self.sensor_faults += 1
+            self._consec_faults += 1
+            if (self.guardrails is not None and self._consec_faults
+                    >= max(1, self.guardrails.fault_tolerance)):
+                self._sensor_failed = True
+            return
+        if not self._admit_reading(actual):
+            return
         if self.profiling:
             # Profile against the deputy: it is what actually drives the metric.
             self._record_sample(deputy, actual)

@@ -100,6 +100,12 @@ class PreemptionHandler:
     def trigger(self) -> None:
         self._flag.set()
 
+    def reset(self) -> None:
+        """Clear the flag after the preemption was handled (serve path: the
+        engine drained + requeued; a replacement worker — or the same one,
+        in tests/chaos runs — resumes from the requeued work)."""
+        self._flag.clear()
+
     @property
     def triggered(self) -> bool:
         return self._flag.is_set()

@@ -44,6 +44,25 @@ def main() -> None:
                          "kernel (attention-only archs); dense = per-slot "
                          "[max_batch, cache_len] cache")
     ap.add_argument("--full-size", action="store_true")
+    # open-loop trace mode (serve/README.md): arrivals at trace rate on a
+    # virtual clock, tier gating + SLO accounting + optional fault injection
+    ap.add_argument("--trace", default=None,
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="replay an open-loop arrival trace instead of the "
+                         "one-shot synthetic batch")
+    ap.add_argument("--rate-rps", type=float, default=10.0,
+                    help="mean arrival rate for --trace (requests/s)")
+    ap.add_argument("--horizon-s", type=float, default=10.0,
+                    help="trace horizon in virtual seconds")
+    ap.add_argument("--ttft-slo-s", type=float, default=None,
+                    help="TTFT p99 SLO: enables per-request goodput "
+                         "accounting and the serve.admit_tier_max brownout "
+                         "controller")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject faults during --trace: slow ticks, a "
+                         "mid-run KV budget cut, a NaN sensor window, one "
+                         "worker preemption")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -53,6 +72,9 @@ def main() -> None:
     weights = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                   for x in jax.tree.leaves(params))
     budget = int(weights + args.budget_headroom_mb * 1e6)
+    if args.trace is not None:
+        _run_trace(cfg, params, budget, args)
+        return
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, hbm_budget_bytes=budget,
                       prefill_mode=args.prefill_mode, kv_mode=args.kv_mode)
@@ -74,6 +96,46 @@ def main() -> None:
           f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
           f"{eng.preemptions} preemptions")
+    eng.close()
+
+
+def _run_trace(cfg, params, budget: int, args) -> None:
+    from repro.serve import (ChaosMonkey, ChaosSpec, OpenLoopDriver, SLOSpec,
+                             ServeEngine, TraceConfig, VirtualClock,
+                             as_requests, synthesize_trace)
+
+    vc = VirtualClock()
+    slo = SLOSpec(ttft_s=args.ttft_slo_s) if args.ttft_slo_s else None
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
+                      cache_len=args.cache_len, hbm_budget_bytes=budget,
+                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode,
+                      slo=slo, clock=vc)
+    trace = synthesize_trace(TraceConfig(
+        process=args.trace, rate_rps=args.rate_rps,
+        horizon_s=args.horizon_s, seed=args.seed))
+    chaos = None
+    if args.chaos:
+        chaos = ChaosMonkey(ChaosSpec(
+            seed=args.seed, slow_tick_prob=0.04, slow_tick_s=0.15,
+            budget_cut_tick=30, budget_cut_frac=0.6, budget_restore_tick=60,
+            sensor_fault_tick=40, sensor_fault_ticks=10,
+            preempt_tick=20, preempt_resume_ticks=3)).install(eng)
+    drv = OpenLoopDriver(
+        eng, as_requests(trace, vocab=cfg.vocab_size, seed=args.seed),
+        clock=vc, chaos=chaos)
+    out = drv.run()
+    slo_part = (f"goodput {out['goodput_tps']:.1f} tok/s under SLO "
+                f"(throughput {out['throughput_tps']:.1f}); "
+                if slo else "")
+    print(f"{cfg.name}: open-loop {args.trace} trace, "
+          f"{out['submitted']} arrivals over {args.horizon_s:.0f}s "
+          f"(virtual elapsed {out['elapsed_s']:.1f}s, {out['ticks']} ticks); "
+          f"{out['finished']} finished, {out['rejected']} rejected "
+          f"{dict(out['reject_counts'])}; {slo_part}"
+          f"{out['preemptions']} preemptions, "
+          f"recompute {out['recompute_tokens']} tokens, "
+          f"chaos events {len(chaos.events) if chaos else 0}, "
+          f"unhandled {len(out['unhandled'])}")
     eng.close()
 
 

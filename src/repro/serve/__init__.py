@@ -1,6 +1,14 @@
-from .engine import Request, ServeEngine
+from .engine import Request, RejectReason, SLOSpec, ServeEngine
 from .kv_cache import KVBlockPool, kv_bytes_per_token
 from .paging import PagedKVAllocator
+from .traffic import (OpenLoopDriver, TickCostModel, TierSpec, TraceConfig,
+                      TraceEvent, VirtualClock, as_requests, concat_traces,
+                      synthesize_trace)
+from .chaos import ChaosMonkey, ChaosSpec
 
-__all__ = ["Request", "ServeEngine", "KVBlockPool", "PagedKVAllocator",
-           "kv_bytes_per_token"]
+__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine",
+           "KVBlockPool", "PagedKVAllocator", "kv_bytes_per_token",
+           "OpenLoopDriver", "TickCostModel", "TierSpec", "TraceConfig",
+           "TraceEvent", "VirtualClock", "as_requests", "concat_traces",
+           "synthesize_trace",
+           "ChaosMonkey", "ChaosSpec"]

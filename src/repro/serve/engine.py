@@ -103,6 +103,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import os
 import time
 import warnings
@@ -113,18 +114,52 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (ControllerModel, GoalSpec, HBMAccountant,
+from repro.core import (ControllerModel, GoalSpec, Guardrails, HBMAccountant,
                         LatencySensor, SmartConfIndirect, SmartConf,
                         ThroughputSensor)
 from repro.core.smartconf import ConfRegistry
+from repro.distributed.fault_tolerance import PreemptionHandler
 from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
 from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
 from .paging import PagedKVAllocator
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine"]
 
 _MIN_BUCKET = 16
+
+
+class RejectReason(str, enum.Enum):
+    """Why the engine refused (or gave up on) a request — the typed reason
+    the overload/robustness contract promises instead of a crash or a
+    silent scheduler spin.  See serve/README.md for the full semantics."""
+
+    EMPTY_PROMPT = "empty_prompt"          # nothing to prefill
+    PROMPT_TOO_LONG = "prompt_too_long"    # prompt+new tokens exceed cache_len
+    KV_FOOTPRINT = "kv_footprint"          # KV need exceeds the block budget
+    DEADLINE_EXPIRED = "deadline_expired"  # deadline passed while waiting
+    BROWNOUT_SHED = "brownout_shed"        # browned out past the TTFT SLO
+    DRAINING = "draining"                  # worker preemption in progress
+
+    def __str__(self) -> str:              # counters key on the short name
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Serving-level objectives the engine is *measured* against.
+
+    ``ttft_s`` is the per-request TTFT bound: a finished request only counts
+    toward goodput if its own TTFT met it, and the fleet goal the
+    ``serve.admit_tier_max`` brownout controller drives is TTFT-p99 <=
+    ``ttft_s``.  ``decode_s`` (optional) is the decode-latency p99 goal the
+    ``serve.prefill_chunk_tokens`` controller targets.  ``window`` sizes the
+    SLO latency sensors: small enough that the controllers see the current
+    regime, not a stale mix across a load shift."""
+
+    ttft_s: float
+    decode_s: float | None = None
+    window: int = 64
 
 
 def _one_shot_reason(cfg: ArchConfig) -> str:
@@ -149,8 +184,11 @@ class Request:
     req_id: int
     prompt: np.ndarray          # [S] int32
     max_new_tokens: int
+    tier: int = 0               # priority tier; 0 = highest, shed last
+    deadline_s: float | None = None  # completion deadline (from submit)
     prompt_bytes: int = 0
     submitted_t: float = 0.0
+    queued_t: float | None = None    # first admission past the tier gate
     first_token_t: float | None = None
     done_t: float | None = None
     generated: list = dataclasses.field(default_factory=list)
@@ -160,6 +198,8 @@ class Request:
     gen_count: int = 0          # tokens generated (device-resident until done)
     admit_seq: int = 0          # scheduling order; highest = first preempted
     preempted: int = 0          # times this request was kicked back to queue
+    reject_reason: RejectReason | None = None
+    slo_ok: bool | None = None  # set at completion: counted toward goodput?
 
 
 class ServeEngine:
@@ -169,6 +209,9 @@ class ServeEngine:
                  latency_goal_s: float | None = None,
                  registry: ConfRegistry | None = None,
                  prefill_mode: str = "auto", kv_mode: str = "auto",
+                 slo: SLOSpec | None = None, num_tiers: int = 3,
+                 admit_tier_max: int | None = None,
+                 preemption: PreemptionHandler | None = None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         self.cfg = cfg
         self.params = params
@@ -266,7 +309,11 @@ class ServeEngine:
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.rejected = 0
+        self.shed: list[Request] = []   # typed-rejected requests, in order
+        self.reject_counts: collections.Counter = collections.Counter()
         self.preemptions = 0
+        self.recompute_tokens = 0       # prefilled work thrown away by
+        #                                 preemption (bounded-recompute gauge)
         self._admit_counter = 0
         self._free_slots = collections.deque(range(max_batch))
         self.prefill_calls = 0
@@ -285,6 +332,7 @@ class ServeEngine:
         self._tick_issued = 0
         self._tick_live = 0
         self._tick_packed_segments = 0
+        self._tick_decode = 0
 
         # device-resident hot state (one fused batch across slots); the
         # host only keeps positions/counters, never token values
@@ -372,11 +420,47 @@ class ServeEngine:
         # of ticks that advanced at least one decoding slot — the latency a
         # decode token actually waited for, which is what the sc_chunk
         # controller must attribute to its own knob (a long prefill sharing
-        # the tick inflates it; host-side admission work does not)
+        # the tick inflates it; host-side admission work does not).
+        # Under an SLO the latency windows shrink to slo.window so the
+        # brownout controller reads the current load regime, not a stale
+        # mix across a traffic shift.
+        slo_window = slo.window if slo is not None else 512
         self.tick_latency = LatencySensor(clock=clock)
-        self.decode_latency = LatencySensor(clock=clock)
-        self.ttft = LatencySensor(clock=clock)
+        self.decode_latency = LatencySensor(window=slo_window, clock=clock)
+        self.ttft = LatencySensor(window=slo_window, clock=clock)
+        # controller-facing TTFT, measured from ADMISSION ELIGIBILITY (the
+        # tick the request first cleared the tier gate into the token
+        # queue), not from submit().  The brownout gate's own parking delay
+        # must never feed back into the signal that opens/closes the gate:
+        # with submit-relative TTFT, every parked request re-admitted after
+        # a burst carries a blown sample, p99 stays pinned above the goal,
+        # and the gate latches shut (observed: goodput collapse).  True
+        # client TTFT (self.ttft) still decides goodput.
+        self.ttft_ctrl = LatencySensor(window=slo_window, clock=clock)
         self.throughput = ThroughputSensor(window_seconds=5.0, clock=clock)
+
+        # SLO / multi-tenant overload state (serve/README.md): tiered
+        # admission with graceful brownout, per-request deadlines, and
+        # goodput-under-SLO accounting at completion
+        self.slo = slo
+        self.num_tiers = max(1, int(num_tiers))
+        self.admit_tier_max = (self.num_tiers - 1 if admit_tier_max is None
+                               else int(admit_tier_max))
+        self.slo_good_requests = 0
+        self.slo_miss_requests = 0
+        self.slo_good_tokens = 0
+        self.slo_miss_tokens = 0
+        # chaos hook: every sensor reading the controllers consume passes
+        # through the tap (fault injection corrupts here; the SmartConf
+        # guardrails are what must absorb it)
+        self.sensor_tap: Callable[[str, float], float] | None = None
+        # worker-preemption wiring (distributed.fault_tolerance): on
+        # trigger the engine drains — requeues every in-flight request and
+        # refuses new work with a typed reason — instead of crashing
+        self.preemption = preemption if preemption is not None \
+            else PreemptionHandler()
+        self._draining = False
+        self._closed = False
 
         # SmartConf PerfConfs
         self.enable_smartconf = enable_smartconf
@@ -385,12 +469,19 @@ class ServeEngine:
         self.sc_queue = None
         self.sc_kv = None
         self.sc_chunk = None
+        self.sc_admit = None
+        # sensor-sanity guardrails for every serve controller: a dropped-out
+        # or chaos-corrupted sensor (NaN, negative, physically impossible
+        # spike) must never reach Eq. 2 — after 3 consecutive insane
+        # readings the knob pins to its last-known-good value
+        byte_rails = Guardrails(perf_lo=0.0, perf_hi=1e15)
+        lat_rails = Guardrails(perf_lo=0.0, perf_hi=3600.0)
         if enable_smartconf and hbm_budget_bytes:
             goal = GoalSpec(float(hbm_budget_bytes), hard=True,
                             super_hard=True)
             self.sc_queue = SmartConfIndirect(
                 "serve.max_queue_tokens", metric="hbm_bytes", goal=goal,
-                initial=0.0, registry=self.registry,
+                initial=0.0, registry=self.registry, guardrails=byte_rails,
                 model=ControllerModel(alpha=float(QUEUE_TOKEN_BYTES),
                                       lam=0.05, delta=1.15, conf_min=0.0,
                                       conf_max=1e9))
@@ -400,34 +491,93 @@ class ServeEngine:
             self.sc_kv = SmartConfIndirect(
                 "serve.kv_block_budget", metric="hbm_bytes", goal=goal,
                 initial=1.0, registry=self.registry,
+                guardrails=dataclasses.replace(byte_rails),
                 model=ControllerModel(alpha=float(max(1, self.pool.block_bytes)),
                                       lam=0.05, delta=1.15, conf_min=1.0,
                                       conf_max=1e9))
-            if latency_goal_s is not None:
-                # alpha: prefill seconds per token, measured lazily; start 1e-4
+            decode_goal = latency_goal_s if latency_goal_s is not None \
+                else (slo.decode_s if slo is not None else None)
+            if decode_goal is not None:
+                # alpha: prefill seconds per token, measured lazily; start
+                # 1e-4.  The slew clamp bounds one actuation to a quarter of
+                # the knob range: a single insane error cannot slam the
+                # chunk budget across its whole span in one interval.
                 self.sc_chunk = SmartConf(
                     "serve.prefill_chunk_tokens", metric="decode_p99_s",
-                    goal=GoalSpec(latency_goal_s, hard=False),
+                    goal=GoalSpec(decode_goal, hard=False),
                     initial=float(cache_len), registry=self.registry,
+                    guardrails=dataclasses.replace(
+                        lat_rails, max_step=max(float(block_tokens),
+                                                cache_len / 4.0)),
                     model=ControllerModel(alpha=1e-4, lam=0.1, delta=1.3,
                                           conf_min=float(block_tokens),
                                           conf_max=float(cache_len)))
+        if enable_smartconf and slo is not None and admit_tier_max is None:
+            # graceful-brownout controller: admit_tier_max is a direct
+            # PerfConf on TTFT-p99 — overload pushes p99 past the (hard)
+            # SLO goal, the two-pole controller sheds the lowest tiers
+            # first (conf drops), and calm traffic re-opens them.  alpha =
+            # one tier's worth of TTFT per step, in goal units: admitting
+            # one more tier is modeled to add ~0.5 x the SLO bound to p99.
+            self.sc_admit = SmartConf(
+                "serve.admit_tier_max", metric="ttft_p99_s",
+                goal=GoalSpec(float(slo.ttft_s), hard=True),
+                initial=float(self.num_tiers - 1), registry=self.registry,
+                guardrails=dataclasses.replace(lat_rails),
+                model=ControllerModel(alpha=0.5 * float(slo.ttft_s),
+                                      lam=0.1, delta=1.3, conf_min=0.0,
+                                      conf_max=float(self.num_tiers - 1)))
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: Request) -> None:
+    def _reject(self, req: Request, reason: RejectReason) -> RejectReason:
+        """Typed rejection: the request is recorded (``shed``), counted,
+        and stamped with the reason — never an exception mid-tick."""
+        req.reject_reason = reason
+        req.done_t = self.clock()
+        self.rejected += 1
+        self.reject_counts[str(reason)] += 1
+        self.shed.append(req)
+        return reason
+
+    def submit(self, req: Request) -> RejectReason | None:
+        """Validate + enqueue; returns ``None`` on acceptance or the typed
+        :class:`RejectReason` the request was refused with.  Invalid work is
+        rejected *here*, at the door — an empty prompt, a prompt that cannot
+        fit the KV ring, or a footprint no block budget could ever hold
+        would otherwise crash (or silently spin) the scheduler mid-tick."""
+        req.prompt_bytes = len(req.prompt) * QUEUE_TOKEN_BYTES
+        req.submitted_t = self.clock()
+        if self._draining or self.preemption.triggered:
+            return self._reject(req, RejectReason.DRAINING)
+        if len(req.prompt) == 0:
+            return self._reject(req, RejectReason.EMPTY_PROMPT)
         npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
         total = npatch + len(req.prompt) + req.max_new_tokens
         if total > self.cache_len:
             # beyond cache_len the KV ring wraps (prompt history or sampled
-            # tokens silently fall out) — reject loudly instead
-            raise ValueError(
-                f"prompt ({len(req.prompt)}) + max_new_tokens "
-                f"({req.max_new_tokens})"
-                + (f" + patches ({npatch})" if npatch else "")
-                + f" exceeds cache_len={self.cache_len}")
-        req.prompt_bytes = len(req.prompt) * QUEUE_TOKEN_BYTES
-        req.submitted_t = self.clock()
+            # tokens silently fall out) — shed loudly instead
+            return self._reject(req, RejectReason.PROMPT_TOO_LONG)
+        if self._footprint_blocks(req) > self._kv_budget_ceiling():
+            # no admission order could ever schedule this request under the
+            # block budget: refusing now beats queueing it to spin forever
+            return self._reject(req, RejectReason.KV_FOOTPRINT)
         self.waiting.append(req)
+        return None
+
+    def _footprint_blocks(self, req: Request) -> int:
+        """KV blocks the request needs resident while running."""
+        npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
+        need = min(npatch + len(req.prompt) + req.max_new_tokens,
+                   self.cache_len)
+        return -(-need // self.pool.block_tokens)
+
+    def _kv_budget_ceiling(self) -> int:
+        """Largest block budget a request could ever see: the live budget
+        for static engines, the structural store ceiling when SmartConf owns
+        (and may later raise) the budget."""
+        if self.sc_kv is not None:
+            return self.max_batch * self.blocks_per_seq
+        return self.pool.max_blocks
 
     def hbm_bytes(self) -> int:
         return self.accountant.total()
@@ -459,7 +609,18 @@ class ServeEngine:
         self._tick_issued = self._tick_live = 0
         self._tick_packed_segments = 0
         self._tick_dispatches = 0
+        self._tick_decode = 0
+        if self.preemption.triggered:
+            # worker preemption: drain once (requeue every in-flight
+            # request, copy-free), then idle — never crash mid-tick.  The
+            # queue survives for a handoff or an in-place resume.
+            if not self._draining:
+                self._drain_for_preemption()
+            self.tick_latency.record(self.clock() - t0)
+            return self._stats(0)
+        self._draining = False          # preemption cleared: resume serving
         self._update_controllers()
+        self._shed_expired()
         self._admit()
         self._schedule()
         if self.prefill_impl == "packed":
@@ -469,8 +630,12 @@ class ServeEngine:
             n_tokens = self._decode_tick()
         self._finish()
         self.tick_latency.record(self.clock() - t0)
+        return self._stats(n_tokens)
+
+    def _stats(self, n_tokens: int) -> dict:
         return {
             "queued": len(self.queued),
+            "waiting": len(self.waiting),
             "running": len(self.running) + len(self.prefilling),
             "finished": len(self.finished), "hbm": self.hbm_bytes(),
             "tokens": n_tokens,
@@ -484,6 +649,12 @@ class ServeEngine:
             # jitted model calls this tick: the unified packed path costs
             # exactly one; split paths cost up to two (prefill + decode)
             "dispatches": self._tick_dispatches,
+            # work mix this tick (the open-loop harness's virtual cost
+            # model charges prefill lanes — padding included, it costs
+            # compute — and decode tokens separately)
+            "prefill_tokens": self._tick_live,
+            "prefill_issued_tokens": self._tick_issued,
+            "decode_tokens": self._tick_decode,
             # pool-pressure sensors (budget-vs-occupancy, bench_serving)
             "kv_used_blocks": self.pool.used_blocks,
             "kv_budget_blocks": self.pool.max_blocks,
@@ -492,42 +663,170 @@ class ServeEngine:
             "kv_over_budget": self.pool.over_budget,
             "kv_frag_tokens": self.pool.frag_tokens,
             "preemptions": self.preemptions,
+            # SLO / overload sensors (serve/README.md)
+            "admit_tier_max": self.admit_tier_max,
+            "rejected": self.rejected,
+            "draining": self._draining,
+            "slo_good_tokens": self.slo_good_tokens,
+            "slo_miss_tokens": self.slo_miss_tokens,
         }
 
     def run(self, ticks: int) -> list[dict]:
         return [self.tick() for _ in range(ticks)]
 
     # ------------------------------------------------------------ internals
+    def _sense(self, name: str, value: float) -> float:
+        """Controller-facing sensor read, routed through the chaos tap when
+        one is installed (fault injection corrupts readings here; the
+        SmartConf guardrails must absorb whatever comes back)."""
+        tap = self.sensor_tap
+        return tap(name, value) if tap is not None else value
+
     def _update_controllers(self) -> None:
-        if not self.enable_smartconf or self.sc_queue is None:
+        if not self.enable_smartconf:
             return
-        hbm = float(self.hbm_bytes())
-        self.sc_queue.set_perf(hbm, self.queued_tokens)
-        self.max_queue_tokens = max(0, int(self.sc_queue.get_conf()))
-        self.sc_kv.set_perf(hbm, self.pool.used_blocks)
-        self.pool.set_budget(max(1, int(self.sc_kv.get_conf())))
-        if self.paged and self.pool.over_budget:
-            # the budget bit below occupancy: make the cut physical
-            self._enforce_kv_budget()
-        if self.sc_chunk is not None:
-            self.sc_chunk.set_perf(self.decode_latency.p99())
-            self.prefill_chunk = max(1, int(self.sc_chunk.get_conf()))
+        if self.sc_queue is not None:
+            hbm = self._sense("hbm_bytes", float(self.hbm_bytes()))
+            self.sc_queue.set_perf(hbm, self.queued_tokens)
+            self.max_queue_tokens = max(0, int(self.sc_queue.get_conf()))
+            self.sc_kv.set_perf(hbm, self.pool.used_blocks)
+            self.pool.set_budget(max(1, int(self.sc_kv.get_conf())))
+            if self.paged and self.pool.over_budget:
+                # the budget bit below occupancy: make the cut physical
+                self._enforce_kv_budget()
+            if self.sc_chunk is not None:
+                self.sc_chunk.set_perf(
+                    self._sense("decode_p99_s", self.decode_latency.p99()))
+                self.prefill_chunk = max(1, int(self.sc_chunk.get_conf()))
+        if self.sc_admit is not None:
+            # per-tick censored observation: the head-of-line request's
+            # eventual TTFT is at least its current wait; an empty queue
+            # contributes zero.  Without this the sensor FREEZES when the
+            # gate closes (nothing finishes -> no samples -> p99 pinned at
+            # the burst-era value) and the brownout latches shut while the
+            # engine idles; with it the window drains in ~window ticks of
+            # calm and the gate re-opens.
+            now = self.clock()
+            if self.queued:
+                head = self.queued[0]
+                epoch = head.queued_t if head.queued_t is not None \
+                    else head.submitted_t
+                self.ttft_ctrl.record(max(0.0, now - epoch))
+            else:
+                self.ttft_ctrl.record(0.0)
+            self.sc_admit.set_perf(
+                self._sense("ttft_p99_s", self.ttft_ctrl.p99()))
+            self.admit_tier_max = int(self.sc_admit.get_conf())
+
+    def _stamp_first_token(self, req: Request, now: float) -> None:
+        """One TTFT sample per request, at the first compute response
+        (preempted requests keep their original stamp).  Two sensors: the
+        client-true TTFT (from submit; decides goodput) and the
+        controller-facing TTFT (from first admission past the tier gate;
+        feeds sc_admit — see the ttft_ctrl construction note)."""
+        if req.first_token_t is not None:
+            return
+        req.first_token_t = now
+        self.ttft.record(now - req.submitted_t)
+        epoch = req.queued_t if req.queued_t is not None else req.submitted_t
+        self.ttft_ctrl.record(now - epoch)
+
+    def _shed_expired(self) -> None:
+        """Deadline-expired requests still waiting in line are shed with a
+        typed reason: serving them would burn capacity on tokens no client
+        is waiting for (zero goodput), which is exactly what an overloaded
+        engine cannot afford."""
+        now = self.clock()
+
+        def expired(req: Request) -> bool:
+            return (req.deadline_s is not None
+                    and now - req.submitted_t > req.deadline_s)
+
+        if any(expired(r) for r in self.waiting):
+            keep: collections.deque[Request] = collections.deque()
+            for req in self.waiting:
+                if expired(req):
+                    self._reject(req, RejectReason.DEADLINE_EXPIRED)
+                else:
+                    keep.append(req)
+            self.waiting = keep
+        if any(expired(r) for r in self.queued):
+            keep = collections.deque()
+            for req in self.queued:
+                if expired(req):
+                    self.queued_tokens -= len(req.prompt)
+                    self.accountant.credit("queue", req.prompt_bytes)
+                    self._reject(req, RejectReason.DEADLINE_EXPIRED)
+                else:
+                    keep.append(req)
+            self.queued = keep
 
     def _admit(self) -> None:
+        """FIFO admission gated by the brownout tier: requests above
+        ``admit_tier_max`` stay in the waiting line while their TTFT SLO is
+        still winnable (requeue — the brownout may lift) without blocking
+        eligible tiers behind them (no head-of-line starvation across
+        tiers).  Once a browned-out request's TTFT SLO is already blown it
+        is *shed* with a typed reason: serving it late is zero goodput that
+        would queue ahead of fresh, still-winnable traffic when the gate
+        re-opens — the client gets a fast typed rejection instead of a slow
+        useless answer."""
+        # the gate applies to the already-admitted queue too: when it
+        # drops, queued requests above it (not yet prefilling — no KV to
+        # drop) are pushed back to the *front* of the waiting line in
+        # admission order.  Without this, the gulp admitted during the
+        # controller's reaction lag at a load shift (or an off-burst
+        # re-open) sits in the queue ahead of premium traffic and blows
+        # the very TTFT the gate closed to protect.
+        if any(r.tier > self.admit_tier_max for r in self.queued):
+            keep: collections.deque[Request] = collections.deque()
+            back: list[Request] = []
+            for req in self.queued:
+                if req.tier > self.admit_tier_max:
+                    self.queued_tokens -= len(req.prompt)
+                    self.accountant.credit("queue", req.prompt_bytes)
+                    back.append(req)
+                else:
+                    keep.append(req)
+            self.queued = keep
+            self.waiting.extendleft(reversed(back))
+        browned: collections.deque[Request] = collections.deque()
+        now = self.clock()
         while self.waiting:
-            req = self.waiting[0]
+            req = self.waiting.popleft()
+            if req.tier > self.admit_tier_max:
+                if (self.slo is not None
+                        and now - req.submitted_t > self.slo.ttft_s):
+                    self._reject(req, RejectReason.BROWNOUT_SHED)
+                else:
+                    browned.append(req)     # shed lowest tiers first: wait
+                continue
             if self.queued_tokens + len(req.prompt) > self.max_queue_tokens:
+                browned.append(req)         # queue full: FIFO order holds
                 break
-            self.waiting.popleft()
+            if req.queued_t is None:
+                req.queued_t = now          # the ttft_ctrl epoch (once)
             self.queued.append(req)
             self.queued_tokens += len(req.prompt)
             self.accountant.charge("queue", req.prompt_bytes)
+        browned.extend(self.waiting)
+        self.waiting = browned
 
     def _schedule(self) -> None:
         while self.queued and self._free_slots:
             req = self.queued[0]
             total = len(req.prompt) + req.max_new_tokens
             need = min(total, self.cache_len)
+            if self._footprint_blocks(req) > self.pool.max_blocks:
+                # the budget (possibly cut mid-run, below this request's
+                # remaining footprint) can NEVER hold it: park it out of
+                # the schedule with a typed reason instead of the
+                # preempt-readmit-recompute livelock a blind retry becomes
+                self.queued.popleft()
+                self.queued_tokens -= len(req.prompt)
+                self.accountant.credit("queue", req.prompt_bytes)
+                self._reject(req, RejectReason.KV_FOOTPRINT)
+                continue
             if self.paged and (self.pool.free_blocks
                                < -(-need // self.pool.block_tokens)):
                 # store smaller than demand (start-small under an HBM goal,
@@ -607,21 +906,31 @@ class ServeEngine:
         return True
 
     def _preempt_lowest_priority(self) -> None:
-        """Kick the most recently scheduled sequence back to the queue
+        """Kick the lowest-priority sequence back to the queue — highest
+        tier number first (brownout order: shed the cheapest tenants
+        before premium traffic), newest-admitted within a tier
         (recompute-on-readmission, paper §4.2: the cut is enforced by
-        temporarily undoing the newest work, never by corrupting state)."""
+        temporarily undoing work, never by corrupting state)."""
         cands = list(self.prefilling.items()) + list(self.running.items())
         if not cands:
             return
-        slot, req = max(cands, key=lambda sr: sr[1].admit_seq)
+        slot, req = max(cands, key=lambda sr: (sr[1].tier, sr[1].admit_seq))
+        self._requeue_slot(slot, req)
+        self.preemptions += 1
+
+    def _requeue_slot(self, slot: int, req: Request) -> None:
+        """Undo a slot's in-flight work back to the queue head (state reset
+        to prefilled=0: recompute on readmission, counted)."""
         self.prefilling.pop(slot, None)
         self.running.pop(slot, None)
         self.pool.free(req.req_id)
         self._free_slots.append(slot)
         self.slot_pos[slot] = -1
-        self._bt_np[slot] = -1
-        self._bt_dirty = True
+        if self.paged:
+            self._bt_np[slot] = -1
+            self._bt_dirty = True
         req.slot = None
+        self.recompute_tokens += req.prefilled + req.gen_count
         req.prefilled = 0
         req.gen_count = 0
         req.generated = []
@@ -629,7 +938,26 @@ class ServeEngine:
         self.queued.appendleft(req)
         self.queued_tokens += len(req.prompt)
         self.accountant.charge("queue", req.prompt_bytes)
-        self.preemptions += 1
+
+    # ------------------------------------------------- worker preemption
+    def _drain_for_preemption(self) -> None:
+        """The serve-path answer to ``PreemptionHandler.trigger``: every
+        in-flight request is requeued (newest first, so the queue keeps
+        admission order), new submissions bounce with a typed reason, and
+        ticks idle until the signal clears.  Nothing is lost: the queue is
+        the elastic-restart handoff state."""
+        in_flight = sorted(
+            list(self.prefilling.items()) + list(self.running.items()),
+            key=lambda sr: sr[1].admit_seq, reverse=True)
+        for slot, req in in_flight:
+            self._requeue_slot(slot, req)
+            self.preemptions += 1
+        self._draining = True
+
+    def drained_requests(self) -> list[Request]:
+        """Requests parked by a drain (queued + waiting, admission order):
+        what a replacement worker resubmits after an elastic restart."""
+        return list(self.queued) + list(self.waiting)
 
     # ------------------------------------------------------------- prefill
     def _prefill_tick(self) -> None:
@@ -767,14 +1095,13 @@ class ServeEngine:
             req.prefill_chunks += 1
             if done[slot]:
                 req.gen_count = 1            # first token is on device
-                if req.first_token_t is None:
-                    req.first_token_t = now
-                    self.ttft.record(now - req.submitted_t)
+                self._stamp_first_token(req, now)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
         for slot, req in decoders:
             self.slot_pos[slot] += 1
             req.gen_count += 1
+        self._tick_decode = n_dec
         n_tokens = n_dec + int(done.sum())
         if n_tokens:
             self.throughput.record(n_tokens)
@@ -821,11 +1148,7 @@ class ServeEngine:
             req.prefill_chunks += 1
             if done[slot]:
                 req.gen_count = 1            # first token is on device
-                if req.first_token_t is None:
-                    # preempted requests keep their original TTFT: one
-                    # sample per request, stamped at first compute response
-                    req.first_token_t = now
-                    self.ttft.record(now - req.submitted_t)
+                self._stamp_first_token(req, now)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
 
@@ -857,8 +1180,7 @@ class ServeEngine:
         req.gen_count = 1
         req.prefilled = len(req.prompt)
         req.prefill_chunks = 1
-        req.first_token_t = self.clock()
-        self.ttft.record(req.first_token_t - req.submitted_t)
+        self._stamp_first_token(req, self.clock())
         npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
         self.slot_pos[req.slot] = len(req.prompt) + npatch
 
@@ -890,6 +1212,7 @@ class ServeEngine:
             self.slot_pos[slot] += 1
             req.gen_count += 1
             n += 1
+        self._tick_decode = n
         self.throughput.record(n)
         return n
 
@@ -907,6 +1230,13 @@ class ServeEngine:
             req.generated = [int(t) for t in
                              gen[slot, :min(req.gen_count,
                                             req.max_new_tokens)]]
+            req.slo_ok = self._meets_slo(req)
+            if req.slo_ok:
+                self.slo_good_requests += 1
+                self.slo_good_tokens += len(req.generated)
+            else:
+                self.slo_miss_requests += 1
+                self.slo_miss_tokens += len(req.generated)
             self.finished.append(req)
             del self.running[slot]
             self._free_slots.append(slot)
@@ -916,7 +1246,29 @@ class ServeEngine:
                 self._bt_np[slot] = -1
                 self._bt_dirty = True
 
+    def _meets_slo(self, req: Request) -> bool:
+        """Goodput-under-SLO membership: the request's own TTFT met the SLO
+        bound and it completed inside its deadline.  Tokens served outside
+        either are wasted capacity, not goodput."""
+        if (req.deadline_s is not None and req.done_t is not None
+                and req.done_t - req.submitted_t > req.deadline_s):
+            return False
+        if (self.slo is not None and req.first_token_t is not None
+                and req.first_token_t - req.submitted_t > self.slo.ttft_s):
+            return False
+        return True
+
+    @property
+    def goodput_tokens(self) -> int:
+        """Cumulative generated tokens of finished requests that met their
+        SLO — the serving metric the paper's control loop optimizes for
+        (raw tokens/s counts wasted work; goodput cannot)."""
+        return self.slo_good_tokens
+
     def close(self) -> None:
-        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk):
+        if self._closed:          # idempotent: drain paths may close twice
+            return
+        self._closed = True
+        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit):
             if sc is not None:
                 sc.close()

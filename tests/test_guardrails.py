@@ -1,0 +1,121 @@
+"""Unit tests: SmartConf controller guardrails (sensor sanity, fallback to
+last-known-good, actuation slew clamp + anti-windup, mid-run ceiling cuts).
+
+These are the serve-path robustness guards: an unguarded controller fed a
+NaN reading crashes the first ``int(get_conf())`` actuation; a guarded one
+must keep serving from the last sane configuration.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (ConfRegistry, ControllerModel, GoalSpec, Guardrails,
+                        SmartConf, SmartConfIndirect)
+
+
+def _mk(guardrails, *, alpha=2.0, goal=100.0, initial=10.0, hard=False,
+        conf_min=0.0, conf_max=1000.0):
+    return SmartConf(
+        "test.knob", metric="lat", goal=GoalSpec(goal, hard=hard),
+        initial=initial, registry=ConfRegistry(), guardrails=guardrails,
+        model=ControllerModel(alpha=alpha, conf_min=conf_min,
+                              conf_max=conf_max))
+
+
+def test_insane_readings_never_reach_the_controller():
+    sc = _mk(Guardrails(perf_lo=0.0, perf_hi=1e6))
+    sc.set_perf(50.0)
+    base = sc.get_conf()
+    for bad in (math.nan, math.inf, -math.inf, -1.0, 1e9):
+        sc.set_perf(bad)
+    assert sc.sensor_faults == 5
+    # one sane reading between faults keeps the knob live and finite
+    assert math.isfinite(sc.get_conf())
+    assert sc.get_conf() == pytest.approx(sc.get_conf())  # stable when blind
+    assert base is not None
+
+
+def test_nan_crashes_unguarded_but_not_guarded():
+    unguarded = _mk(None)
+    unguarded.set_perf(math.nan)
+    with pytest.raises(ValueError):
+        int(unguarded.get_conf())    # int(nan): what chaos does to naive code
+    guarded = _mk(Guardrails(perf_lo=0.0, perf_hi=1e6))
+    guarded.set_perf(math.nan)
+    assert math.isfinite(guarded.get_conf())
+
+
+def test_fallback_after_consecutive_faults_and_recovery():
+    sc = _mk(Guardrails(perf_lo=0.0, perf_hi=1e6, fault_tolerance=3))
+    sc.set_perf(50.0)
+    good = sc.get_conf()
+    assert not sc.sensor_failed
+    sc.set_perf(math.nan)
+    sc.set_perf(math.nan)
+    assert not sc.sensor_failed          # under the tolerance: still live
+    sc.set_perf(math.nan)
+    assert sc.sensor_failed              # 3 consecutive: declared failed
+    assert sc.get_conf() == pytest.approx(good)   # pinned to last-known-good
+    sc.set_perf(50.0)                    # sensor recovers
+    assert not sc.sensor_failed
+    assert math.isfinite(sc.get_conf())
+
+
+def test_explicit_fallback_wins_over_last_good():
+    sc = _mk(Guardrails(perf_lo=0.0, perf_hi=1e6, fault_tolerance=1,
+                        fallback=42.0))
+    sc.set_perf(50.0)
+    sc.get_conf()
+    sc.set_perf(math.nan)
+    assert sc.sensor_failed
+    assert sc.get_conf() == pytest.approx(42.0)
+
+
+def test_slew_clamp_bounds_one_actuation():
+    sc = _mk(Guardrails(max_step=5.0), alpha=1.0, goal=1000.0, initial=10.0)
+    first = sc.get_conf()                # establishes last-known-good
+    sc.set_perf(0.0)                     # error 1000 -> wants a huge step
+    second = sc.get_conf()
+    assert abs(second - first) <= 5.0 + 1e-9
+    assert sc.clamped_actuations >= 1
+
+
+def test_slew_clamp_anti_windup_resumes_from_applied_value():
+    sc = _mk(Guardrails(max_step=5.0), alpha=1.0, goal=1000.0, initial=10.0)
+    sc.get_conf()
+    sc.set_perf(0.0)
+    clamped = sc.get_conf()
+    # the controller's own state was written back to the applied value, so
+    # the next step integrates from there (no hidden wound-up integral)
+    assert sc.controller.conf == pytest.approx(clamped)
+    sc.set_perf(0.0)
+    nxt = sc.get_conf()
+    assert abs(nxt - clamped) <= 5.0 + 1e-9
+
+
+def test_clamp_conf_max_mid_run_cut():
+    sc = _mk(Guardrails(perf_lo=0.0, perf_hi=1e6), initial=800.0)
+    sc.set_perf(50.0)
+    assert sc.get_conf() > 500.0
+    sc.clamp_conf_max(100.0)             # chaos: capacity loss mid-run
+    assert sc.get_conf() <= 100.0
+    sc.set_perf(50.0)                    # keeps controlling under the cut
+    assert sc.get_conf() <= 100.0
+    sc.clamp_conf_max(1000.0)            # restore: the range re-opens
+    sc.set_perf(50.0)
+    assert sc.get_conf() <= 1000.0
+
+
+def test_indirect_rejects_non_finite_deputy():
+    sc = SmartConfIndirect(
+        "test.indirect", metric="bytes", goal=GoalSpec(1000.0, hard=True),
+        initial=10.0, registry=ConfRegistry(),
+        guardrails=Guardrails(perf_lo=0.0, perf_hi=1e9, fault_tolerance=1),
+        model=ControllerModel(alpha=2.0, conf_min=0.0, conf_max=1e6))
+    sc.set_perf(500.0, 5.0)
+    good = sc.get_conf()
+    sc.set_perf(500.0, math.nan)         # deputy sensor dropped out
+    assert sc.sensor_faults >= 1
+    assert math.isfinite(sc.get_conf())
+    assert sc.get_conf() == pytest.approx(good)

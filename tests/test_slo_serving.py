@@ -1,0 +1,269 @@
+"""Integration: SLO-constrained serving — typed rejections, graceful
+brownout, deadline shedding, worker-preemption drain/resume, the
+preemption-readmission livelock guard, and chaos-corrupted sensors."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import zoo
+from repro.serve import (ChaosMonkey, ChaosSpec, OpenLoopDriver, Request,
+                         RejectReason, SLOSpec, ServeEngine, TickCostModel,
+                         TierSpec, TraceConfig, VirtualClock, as_requests,
+                         synthesize_trace)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _weight_bytes(params):
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def _req(rng, cfg, rid, plen=16, new=6, **kw):
+    return Request(rid, rng.integers(1, cfg.vocab_size, plen)
+                   .astype(np.int32), new, **kw)
+
+
+# -------------------------------------------------------- typed rejections
+
+def test_submit_rejects_invalid_requests_typed(small_model, rng):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      enable_smartconf=False)
+    assert eng.submit(_req(rng, cfg, 0, plen=0)) is RejectReason.EMPTY_PROMPT
+    assert eng.submit(_req(rng, cfg, 1, plen=80, new=8)) \
+        is RejectReason.PROMPT_TOO_LONG
+    assert eng.submit(_req(rng, cfg, 2, plen=16, new=6)) is None
+    assert eng.rejected == 2
+    assert eng.reject_counts["empty_prompt"] == 1
+    assert eng.reject_counts["prompt_too_long"] == 1
+    assert all(r.reject_reason is not None for r in eng.shed)
+    for _ in range(30):
+        eng.tick()                       # rejected work never crashes a tick
+    assert len(eng.finished) == 1
+    eng.close()
+
+
+def test_submit_rejects_footprint_beyond_any_budget(small_model, rng):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      block_tokens=16, enable_smartconf=False)
+    eng.set_kv_budget(1)                 # 16 tokens of KV, total
+    big = _req(rng, cfg, 0, plen=40, new=8)   # needs 3 blocks
+    assert eng.submit(big) is RejectReason.KV_FOOTPRINT
+    assert eng.submit(_req(rng, cfg, 1, plen=8, new=4)) is None
+    eng.close()
+
+
+# ------------------------------------------------------- deadline shedding
+
+def test_deadline_expired_requests_are_shed(small_model, rng):
+    cfg, params = small_model
+    vc = VirtualClock()
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=64,
+                      enable_smartconf=False, clock=vc)
+    eng.submit(_req(rng, cfg, 0, plen=16, new=8))
+    eng.tick()                            # request 0 occupies the only slot
+    eng.submit(_req(rng, cfg, 1, plen=16, new=4, deadline_s=0.5))
+    vc.advance(1.0)                       # its deadline passes while queued
+    eng.tick()
+    assert eng.reject_counts["deadline_expired"] == 1
+    shed = [r for r in eng.shed
+            if r.reject_reason is RejectReason.DEADLINE_EXPIRED]
+    assert [r.req_id for r in shed] == [1]
+    for _ in range(30):
+        eng.tick()
+    assert [r.req_id for r in eng.finished] == [0]
+    eng.close()
+
+
+# ------------------------------------------------------------- brownout
+
+def test_static_tier_gate_sheds_low_tiers_without_hol_blocking(
+        small_model, rng):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      enable_smartconf=False, num_tiers=3, admit_tier_max=0)
+    eng.submit(_req(rng, cfg, 0, new=4, tier=2))   # browned-out, arrives first
+    eng.submit(_req(rng, cfg, 1, new=4, tier=0))
+    for _ in range(20):
+        eng.tick()
+    # tier 0 was served THROUGH the waiting tier-2 head (no HOL blocking)
+    assert [r.req_id for r in eng.finished] == [1]
+    assert [r.req_id for r in eng.waiting] == [0]  # parked, not rejected
+    eng.admit_tier_max = 2                          # brownout lifts
+    for _ in range(20):
+        eng.tick()
+    assert sorted(r.req_id for r in eng.finished) == [0, 1]
+    eng.close()
+
+
+def test_adaptive_brownout_engages_under_overload(small_model):
+    """Open-loop overload: the sc_admit controller must shed low tiers
+    (admit_tier_max drops) and tier-0 must keep a better SLO attainment
+    than tier-2."""
+    cfg, params = small_model
+    budget = _weight_bytes(params) + 4_000_000
+    vc = VirtualClock()
+    slo = SLOSpec(ttft_s=1.0, window=32)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                      hbm_budget_bytes=budget, block_tokens=16,
+                      slo=slo, num_tiers=3, clock=vc)
+    # sustained overload (~1.75x capacity): tier outcomes must be set by
+    # the brownout gate, not by queue luck — at milder rates the gate's
+    # reaction lag leaves marginal late-burst tier-0 misses that swamp
+    # the tier ordering.
+    trace = synthesize_trace(TraceConfig(
+        process="bursty", rate_rps=35.0, horizon_s=6.0, seed=11,
+        burst_factor=8.0, burst_period_s=3.0, burst_duty=0.4,
+        prompt_lo=4, prompt_hi=24, new_lo=2, new_hi=8,
+        tiers=(TierSpec(0, 0.3, deadline_s=20.0), TierSpec(1, 0.3),
+               TierSpec(2, 0.4))))
+    arrivals = as_requests(trace, vocab=cfg.vocab_size, seed=1)
+    admit_probe = []
+    drv = OpenLoopDriver(
+        eng, arrivals, clock=vc,
+        cost=TickCostModel(base_s=0.02, prefill_token_s=1e-3,
+                           decode_token_s=8e-3),
+        chaos=lambda d, t: admit_probe.append(d.engine.admit_tier_max) or 0.0)
+    out = drv.run()
+    assert out["unhandled"] == []
+    assert min(admit_probe) < 2, "brownout never engaged under overload"
+    assert max(admit_probe) == 2, "brownout never lifted"
+    # attainment vs *offered* work per tier: brownout_shed rejects
+    # would-miss low-tier requests before they finish, so attainment
+    # among finished requests alone is survivor-biased.
+    offered: dict[int, int] = {}
+    for _, req in arrivals:
+        offered[req.tier] = offered.get(req.tier, 0) + req.max_new_tokens
+    good = out["goodput_tokens_by_tier"]
+    t0 = good.get(0, 0) / max(1, offered.get(0, 0))
+    t2 = good.get(2, 0) / max(1, offered.get(2, 0))
+    assert t0 >= t2, "premium tier did not get better SLO attainment"
+    assert out["slo_good_tokens"] > 0
+    eng.close()
+
+
+# ------------------------------------------------ preemption drain/resume
+
+def test_preemption_drains_requeues_and_resumes(small_model, rng):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      enable_smartconf=False)
+    for i in range(4):
+        eng.submit(_req(rng, cfg, i, plen=12, new=6))
+    eng.tick(); eng.tick()                # some work is mid-flight
+    assert eng.running or eng.prefilling
+    eng.preemption.trigger()
+    stats = eng.tick()                    # drain tick: no crash, no progress
+    assert stats["draining"] is True
+    assert not eng.running and not eng.prefilling
+    assert eng.preemptions >= 1
+    assert len(eng.drained_requests()) == 4   # nothing was lost
+    # admission order survives the drain
+    seq = [r.req_id for r in eng.drained_requests()]
+    assert seq == sorted(seq)
+    assert eng.submit(_req(rng, cfg, 99)) is RejectReason.DRAINING
+    eng.tick()                            # idles while the signal is up
+    eng.preemption.reset()
+    for _ in range(60):
+        eng.tick()
+    assert sorted(r.req_id for r in eng.finished) == [0, 1, 2, 3]
+    assert all(len(r.generated) == 6 for r in eng.finished)
+    assert eng.recompute_tokens > 0       # drained work was recomputed...
+    eng.close()
+    eng.close()                           # ...and close() is idempotent
+
+
+# ------------------------------------------- preemption-readmission livelock
+
+def test_budget_cut_below_footprint_parks_not_livelocks(small_model, rng):
+    """Cut the KV budget below one request's remaining footprint mid-run:
+    the engine must reject it with a typed reason after at most one
+    preemption, not re-preempt/readmit it forever."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      block_tokens=16, enable_smartconf=False)
+    big = _req(rng, cfg, 0, plen=40, new=12)     # needs 4 blocks of 16
+    eng.submit(big)
+    for _ in range(3):
+        eng.tick()                        # admitted and generating
+    assert big.gen_count > 0 or big.prefilled > 0
+    eng.set_kv_budget(1)                  # 1 block: can NEVER hold it again
+    for _ in range(20):
+        eng.tick()
+    assert big.reject_reason is RejectReason.KV_FOOTPRINT
+    assert big.preempted == 1             # exactly one undo, then parked
+    # bounded recompute: at most one admission's worth of work was redone
+    assert eng.recompute_tokens <= len(big.prompt) + big.max_new_tokens
+    stats = eng.tick()                    # engine is idle and healthy
+    assert stats["running"] == 0 and eng.queued_tokens == 0
+    eng.close()
+
+
+# ----------------------------------------------------- chaos sensor faults
+
+def test_chaos_nan_sensors_do_not_crash_guarded_controllers(small_model):
+    cfg, params = small_model
+    budget = _weight_bytes(params) + 4_000_000
+    vc = VirtualClock()
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      hbm_budget_bytes=budget, block_tokens=16,
+                      slo=SLOSpec(ttft_s=1.0, decode_s=0.5, window=32),
+                      clock=vc)
+    trace = synthesize_trace(TraceConfig(rate_rps=8.0, horizon_s=4.0,
+                                         seed=3, prompt_hi=24, new_hi=6))
+    monkey = ChaosMonkey(ChaosSpec(
+        seed=0, sensor_fault_tick=5, sensor_fault_ticks=12,
+        sensor_fault_mode="nan",
+        sensor_names=("decode_p99_s", "ttft_p99_s", "hbm_bytes"))
+    ).install(eng)
+    drv = OpenLoopDriver(
+        eng, as_requests(trace, vocab=cfg.vocab_size, seed=2), clock=vc,
+        cost=TickCostModel(base_s=0.02, prefill_token_s=1e-3,
+                           decode_token_s=8e-3),
+        chaos=monkey)
+    out = drv.run()
+    assert out["unhandled"] == []
+    faults = sum(sc.sensor_faults for sc in
+                 (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit)
+                 if sc is not None)
+    assert faults > 0, "chaos window never corrupted a controller read"
+    assert any("sensor_nan" in name for _, name in monkey.events)
+    assert out["finished"] > 0            # service continued through faults
+    eng.close()
+
+
+def test_chaos_preemption_mid_trace_recovers(small_model):
+    cfg, params = small_model
+    vc = VirtualClock()
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      enable_smartconf=False, clock=vc,
+                      slo=SLOSpec(ttft_s=5.0))
+    trace = synthesize_trace(TraceConfig(rate_rps=5.0, horizon_s=3.0,
+                                         seed=4, prompt_hi=16, new_hi=5))
+    # tick 5 deterministically has a request in flight (the schedule up to
+    # the preempt tick is unaffected by the injection itself)
+    monkey = ChaosMonkey(ChaosSpec(preempt_tick=5, preempt_resume_ticks=4)
+                         ).install(eng)
+    drv = OpenLoopDriver(
+        eng, as_requests(trace, vocab=cfg.vocab_size, seed=5), clock=vc,
+        cost=TickCostModel(base_s=0.02, prefill_token_s=1e-3,
+                           decode_token_s=8e-3),
+        chaos=monkey)
+    out = drv.run()
+    assert out["unhandled"] == []
+    assert ("preempt" in [n for _, n in monkey.events]
+            and "resume" in [n for _, n in monkey.events])
+    assert out["preemptions"] >= 1
+    # every submitted request was either finished or typed-rejected
+    assert out["finished"] + out["rejected"] == out["submitted"]
+    assert out["finished"] > 0
+    eng.close()

@@ -1,0 +1,117 @@
+"""Unit tests: open-loop trace synthesis, virtual clock, tick cost model."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serve.traffic import (TickCostModel, TierSpec, TraceConfig,
+                                 TraceEvent, VirtualClock, as_requests,
+                                 concat_traces, synthesize_trace)
+
+
+def test_trace_deterministic_from_seed():
+    cfg = TraceConfig(rate_rps=40, horizon_s=4.0, seed=3)
+    assert synthesize_trace(cfg) == synthesize_trace(cfg)
+    other = synthesize_trace(dataclasses.replace(cfg, seed=4))
+    assert other != synthesize_trace(cfg)
+
+
+def test_poisson_rate_matches_config():
+    cfg = TraceConfig(process="poisson", rate_rps=50, horizon_s=40.0, seed=0)
+    n = len(synthesize_trace(cfg))
+    # 2000 expected arrivals; 5 sigma ~ +-224
+    assert 1700 <= n <= 2300
+
+
+def test_bursty_rate_is_modulated():
+    cfg = TraceConfig(process="bursty", rate_rps=30, horizon_s=40.0, seed=1,
+                      burst_factor=6.0, burst_period_s=4.0, burst_duty=0.25)
+    events = synthesize_trace(cfg)
+    on = [e for e in events if (e.t % 4.0) < 1.0]
+    off = [e for e in events if (e.t % 4.0) >= 1.0]
+    on_rate = len(on) / (0.25 * 40.0)
+    off_rate = len(off) / (0.75 * 40.0)
+    assert on_rate > 3.0 * off_rate          # true ratio is 6x
+    # the long-run mean still honours rate_rps
+    assert 0.75 * 30 <= len(events) / 40.0 <= 1.25 * 30
+
+
+def test_diurnal_rate_follows_the_sinusoid():
+    cfg = TraceConfig(process="diurnal", rate_rps=40, horizon_s=40.0, seed=2,
+                      diurnal_period_s=10.0, diurnal_amplitude=0.9)
+    events = synthesize_trace(cfg)
+    # first half of each period is the high phase (sin > 0)
+    high = sum(1 for e in events if (e.t % 10.0) < 5.0)
+    low = len(events) - high
+    assert high > 1.5 * low
+
+
+def test_unknown_process_rejected():
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        synthesize_trace(TraceConfig(process="fractal"))
+
+
+def test_lengths_are_heavy_tailed_and_bounded():
+    cfg = TraceConfig(rate_rps=100, horizon_s=30.0, seed=5,
+                      prompt_lo=4, prompt_hi=64, prompt_alpha=1.1)
+    plens = np.asarray([e.prompt_len for e in synthesize_trace(cfg)])
+    assert plens.min() >= 4 and plens.max() <= 64
+    # heavy tail: the median hugs the floor, but the cap is reached
+    assert np.median(plens) < 12
+    assert plens.max() > 48
+
+
+def test_tier_shares_and_deadlines():
+    tiers = (TierSpec(0, 0.5, deadline_s=5.0), TierSpec(1, 0.5))
+    cfg = TraceConfig(rate_rps=60, horizon_s=20.0, seed=6, tiers=tiers)
+    events = synthesize_trace(cfg)
+    n0 = sum(1 for e in events if e.tier == 0)
+    assert 0.4 <= n0 / len(events) <= 0.6
+    assert all(e.deadline_s == 5.0 for e in events if e.tier == 0)
+    assert all(e.deadline_s is None for e in events if e.tier == 1)
+
+
+def test_as_requests_materialisation():
+    events = [TraceEvent(t=0.5, req_id=7, tier=2, deadline_s=9.0,
+                         prompt_len=11, max_new_tokens=3)]
+    (t, req), = as_requests(events, vocab=64, seed=0, id_base=100)
+    assert t == 0.5 and req.req_id == 107
+    assert req.prompt.dtype == np.int32 and req.prompt.shape == (11,)
+    assert (req.prompt > 0).all() and (req.prompt < 64).all()
+    assert req.tier == 2 and req.deadline_s == 9.0 and req.max_new_tokens == 3
+
+
+def test_virtual_clock():
+    vc = VirtualClock(start=2.0)
+    assert vc() == 2.0
+    assert vc.advance(0.5) == 2.5
+    assert vc() == 2.5
+
+
+def test_tick_cost_model_charges_issued_lanes():
+    cost = TickCostModel(base_s=0.01, prefill_token_s=1e-3,
+                         decode_token_s=1e-2)
+    stats = {"prefill_tokens": 10, "prefill_issued_tokens": 16,
+             "decode_tokens": 3}
+    # issued (padded) lanes are charged, not just live tokens
+    assert cost.cost(stats) == pytest.approx(0.01 + 16e-3 + 3e-2)
+    assert cost.cost({}) == pytest.approx(0.01)
+
+
+def test_concat_traces_regime_shift():
+    calm = synthesize_trace(TraceConfig(
+        process="poisson", rate_rps=10.0, horizon_s=2.0, seed=3))
+    storm = synthesize_trace(TraceConfig(
+        process="bursty", rate_rps=40.0, horizon_s=2.0, t_start=2.0,
+        seed=4, burst_factor=4.0, burst_period_s=1.0, burst_duty=0.5))
+    merged = concat_traces(calm, storm)
+    assert len(merged) == len(calm) + len(storm)
+    ts = [e.t for e in merged]
+    assert ts == sorted(ts)
+    # globally unique, dense ids — safe to materialise as one request list
+    assert [e.req_id for e in merged] == list(range(len(merged)))
+    # the shift is real: the storm half offers several times the calm rate
+    n_calm = sum(1 for e in merged if e.t < 2.0)
+    n_storm = len(merged) - n_calm
+    assert n_storm > 2 * n_calm
