@@ -84,8 +84,10 @@ def _chaos_spec(horizon_s: float):
 
 
 def _run_policy(cfg, params, trace, horizon_s: float, *,
-                adaptive: bool, admit_tier_max: int | None = None) -> dict:
+                adaptive: bool, admit_tier_max: int | None = None,
+                telemetry_dir: str | None = None) -> dict:
     from repro.core.smartconf import ConfRegistry
+    from repro.core.telemetry import Telemetry
     from repro.serve import (ChaosMonkey, OpenLoopDriver, SLOSpec,
                              ServeEngine, TickCostModel, VirtualClock,
                              as_requests)
@@ -97,11 +99,15 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     arrivals = as_requests(trace, vocab=cfg.vocab_size, seed=1)
 
     vc = VirtualClock()
+    # flight recorder on the virtual clock: trace.json timestamps are
+    # virtual microseconds, so the artifact set is deterministic
+    tel = Telemetry(enabled=True, clock=vc) if telemetry_dir else None
     eng = ServeEngine(
         cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
         block_tokens=16, enable_smartconf=adaptive,
         slo=SLOSpec(ttft_s=TTFT_SLO_S, window=24), num_tiers=NUM_TIERS,
-        admit_tier_max=admit_tier_max, registry=ConfRegistry(), clock=vc)
+        admit_tier_max=admit_tier_max, registry=ConfRegistry(), clock=vc,
+        telemetry=tel)
     monkey = ChaosMonkey(_chaos_spec(horizon_s)).install(eng)
     drv = OpenLoopDriver(
         eng, arrivals, clock=vc,
@@ -113,15 +119,65 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     out = drv.run()
     out["wall_s"] = time.perf_counter() - wall0
     out["chaos_events"] = len(monkey.events)
+    out["chaos_schedule"] = list(monkey.events)
     out["sensor_faults"] = sum(
         sc.sensor_faults for sc in
         (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit)
         if sc is not None)
+    if tel is not None:
+        out["telemetry_paths"] = tel.write(telemetry_dir)
     eng.close()
     return out
 
 
+# a chaos fault at tick T must have a controller Decision recorded within
+# [T, T + window]: decisions land every non-drain tick, and the worker
+# preemption drains for preempt_resume_ticks=3 ticks, so 6 covers the
+# longest decision-free gap the schedule can create
+REACTION_WINDOW_TICKS = 6
+
+
+def _assert_telemetry(res: dict) -> str:
+    """The flight-recorder acceptance gates, asserted from the *written*
+    artifacts (not engine internals): every chaos fault is followed by a
+    recorded controller Decision inside the reaction window, and the NaN
+    sensor window shows fallback_engaged=True in the audit log."""
+    import json
+
+    r = res["adaptive"]
+    paths = r["telemetry_paths"]
+    with open(paths["audit"]) as fh:
+        audit = [json.loads(line) for line in fh]
+    assert audit, "adaptive chaos run produced an empty audit.jsonl"
+    decision_ticks = sorted({d["tick"] for d in audit})
+    uncovered = []
+    for tick, name in r["chaos_schedule"]:
+        if not any(tick <= t <= tick + REACTION_WINDOW_TICKS
+                   for t in decision_ticks):
+            uncovered.append((tick, name))
+    assert not uncovered, (
+        f"chaos events with no controller Decision within "
+        f"{REACTION_WINDOW_TICKS} ticks: {uncovered}")
+    fallback = [d for d in audit
+                if d["fallback"] and d["conf"] == "serve.admit_tier_max"]
+    assert fallback, (
+        "NaN sensor window never showed fallback_engaged=True in the "
+        "audit log (guardrails should pin serve.admit_tier_max to "
+        "last-known-good)")
+    with open(paths["trace"]) as fh:
+        trace = json.load(fh)["traceEvents"]
+    chaos_marks = [e for e in trace if e["name"].startswith("chaos:")]
+    assert chaos_marks, "trace.json carries no chaos instant markers"
+    return (f"audit_records={len(audit)} "
+            f"chaos_covered={len(r['chaos_schedule'])} "
+            f"fallback_decisions={len(fallback)} "
+            f"first_fallback_tick={fallback[0]['tick']} "
+            f"trace_events={len(trace)}")
+
+
 def run(smoke: bool = False) -> list[str]:
+    import os
+
     import jax
     from repro.configs import get_config
     from repro.configs.base import reduced
@@ -132,8 +188,10 @@ def run(smoke: bool = False) -> list[str]:
     params, _ = zoo.init(cfg, jax.random.key(0))
     trace = _make_trace(horizon_s)
 
+    tel_dir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "slo_telemetry")
     policies = {
-        "adaptive": dict(adaptive=True),
+        "adaptive": dict(adaptive=True, telemetry_dir=tel_dir),
         "static_open": dict(adaptive=False, admit_tier_max=NUM_TIERS - 1),
         "static_mid": dict(adaptive=False, admit_tier_max=1),
         "static_tight": dict(adaptive=False, admit_tier_max=0),
@@ -177,6 +235,13 @@ def run(smoke: bool = False) -> list[str]:
         f"adaptive={res['adaptive']['goodput_tps']:.2f}tps "
         f"best_static={best['goodput_tps']:.2f}tps({best_name}) "
         f"margin={res['adaptive']['goodput_tps'] / max(best['goodput_tps'], 1e-9):.2f}x"))
+
+    # ---- flight-recorder gates (asserted from the written artifacts) ----
+    rows.append(fmt_row("slo_telemetry", 0.0, _assert_telemetry(res)))
+    # telemetry must be free when off: re-check the disabled-overhead bound
+    # here so the chaos bench carries the whole observability contract
+    from .bench_overhead import telemetry_overhead_rows
+    rows.extend(telemetry_overhead_rows(smoke=smoke))
     return rows
 
 

@@ -30,6 +30,14 @@ from .smartconf import (
     parse_sys_file,
 )
 from .profiler import ProfileBuffer, read_sysfile, synthesize, write_sysfile
+from .telemetry import (
+    Decision,
+    DecisionLog,
+    FlightRecorder,
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+)
 from .sensors import (
     HBMAccountant,
     LatencySensor,
@@ -46,6 +54,8 @@ __all__ = [
     "ConfRegistry", "GLOBAL_REGISTRY", "Guardrails", "SmartConf",
     "SmartConfIndirect", "Transducer", "parse_goals_file", "parse_sys_file",
     "ProfileBuffer", "read_sysfile", "synthesize", "write_sysfile",
+    "Decision", "DecisionLog", "FlightRecorder", "MetricsRegistry",
+    "Telemetry", "Tracer",
     "HBMAccountant", "LatencySensor", "QueueGauge", "StepTimer",
     "ThroughputSensor", "device_live_bytes",
     "ablations", "jax_controller", "simenv",

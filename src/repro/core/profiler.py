@@ -17,6 +17,7 @@ to apply") — :func:`synthesize` refuses to fit from fewer than
 from __future__ import annotations
 
 import collections
+import contextlib
 import json
 import os
 import tempfile
@@ -42,29 +43,52 @@ def read_sysfile(sys_dir: str, conf_name: str) -> dict:
 
 
 def write_sysfile(sys_dir: str, conf_name: str, payload: Mapping) -> str:
-    """Atomic write (the trainer may be checkpointing concurrently)."""
+    """Atomic write (the trainer may be checkpointing concurrently).
+
+    Exception-safe on every path: if ``os.fdopen`` raises, the raw fd is
+    closed directly (an fd wrapped by a failed fdopen is otherwise
+    leaked); if serialization or ``os.replace`` fails, the tmp file is
+    unlinked without a TOCTOU exists-check (``os.replace`` may have
+    already consumed it — a racing second writer could re-create the
+    name between ``exists`` and ``unlink``)."""
     os.makedirs(sys_dir, exist_ok=True)
     path = _sysfile_path(sys_dir, conf_name)
     payload = dict(payload)
     payload["schema"] = _SCHEMA
     fd, tmp = tempfile.mkstemp(dir=sys_dir, prefix=f".{conf_name}.")
     try:
-        with os.fdopen(fd, "w", encoding="utf-8") as fh:
+        fh = os.fdopen(fd, "w", encoding="utf-8")
+    except Exception:
+        os.close(fd)
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+    try:
+        with fh:
             json.dump(payload, fh, indent=1, sort_keys=True)
         os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
+    except BaseException:
+        with contextlib.suppress(OSError):
             os.unlink(tmp)
+        raise
     return path
 
 
 class ProfileBuffer:
-    """In-memory (conf value, perf) sample buffer with periodic flush."""
+    """In-memory (conf value, perf) sample buffer with periodic flush.
 
-    def __init__(self, sys_dir: str, conf_name: str, flush_every: int = 64) -> None:
+    When a ``core.telemetry.MetricsRegistry`` is attached (``metrics=``),
+    every flush also emits into it — ``profiler.<conf>.samples`` counts
+    samples persisted, ``profiler.<conf>.flushes`` counts write-outs — so
+    a profiling run's progress is visible in the same metrics.json as the
+    serving telemetry."""
+
+    def __init__(self, sys_dir: str, conf_name: str, flush_every: int = 64,
+                 metrics=None) -> None:
         self.sys_dir = sys_dir
         self.conf_name = conf_name
         self.flush_every = flush_every
+        self.metrics = metrics
         self._samples: list[tuple[float, float]] = []
         self._flushed: list[tuple[float, float]] = []
         existing = read_sysfile(sys_dir, conf_name)
@@ -79,11 +103,15 @@ class ProfileBuffer:
     def flush(self) -> None:
         if not self._samples:
             return
+        n = len(self._samples)
         self._flushed.extend(self._samples)
         self._samples.clear()
         payload = read_sysfile(self.sys_dir, self.conf_name)
         payload["profile_samples"] = [list(x) for x in self._flushed]
         write_sysfile(self.sys_dir, self.conf_name, payload)
+        if self.metrics is not None:
+            self.metrics.counter(f"profiler.{self.conf_name}.samples").inc(n)
+            self.metrics.counter(f"profiler.{self.conf_name}.flushes").inc()
 
     @property
     def samples(self) -> list[tuple[float, float]]:

@@ -62,6 +62,12 @@ def main() -> None:
                     help="inject faults during --trace: slow ticks, a "
                          "mid-run KV budget cut, a NaN sensor window, one "
                          "worker preemption")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="enable the flight recorder and write trace.json "
+                         "(Chrome trace-event / Perfetto), metrics.json, "
+                         "audit.jsonl (controller decisions) and "
+                         "flight.json (sensor-ring dumps) into this "
+                         "directory (see serve/README.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -75,9 +81,14 @@ def main() -> None:
     if args.trace is not None:
         _run_trace(cfg, params, budget, args)
         return
+    tel = None
+    if args.telemetry_dir:
+        from repro.core.telemetry import Telemetry
+        tel = Telemetry(enabled=True)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, hbm_budget_bytes=budget,
-                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode)
+                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode,
+                      telemetry=tel)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -96,6 +107,10 @@ def main() -> None:
           f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
           f"{eng.preemptions} preemptions")
+    if tel is not None:
+        paths = tel.write(args.telemetry_dir)
+        print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "
+              f"{paths['metrics']}, {paths['audit']}, {paths['flight']}")
     eng.close()
 
 
@@ -106,10 +121,14 @@ def _run_trace(cfg, params, budget: int, args) -> None:
 
     vc = VirtualClock()
     slo = SLOSpec(ttft_s=args.ttft_slo_s) if args.ttft_slo_s else None
+    tel = None
+    if args.telemetry_dir:
+        from repro.core.telemetry import Telemetry
+        tel = Telemetry(enabled=True, clock=vc)  # virtual-time timestamps
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, hbm_budget_bytes=budget,
                       prefill_mode=args.prefill_mode, kv_mode=args.kv_mode,
-                      slo=slo, clock=vc)
+                      slo=slo, clock=vc, telemetry=tel)
     trace = synthesize_trace(TraceConfig(
         process=args.trace, rate_rps=args.rate_rps,
         horizon_s=args.horizon_s, seed=args.seed))
@@ -136,6 +155,10 @@ def _run_trace(cfg, params, budget: int, args) -> None:
           f"recompute {out['recompute_tokens']} tokens, "
           f"chaos events {len(chaos.events) if chaos else 0}, "
           f"unhandled {len(out['unhandled'])}")
+    if tel is not None:
+        paths = tel.write(args.telemetry_dir)
+        print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "
+              f"{paths['metrics']}, {paths['audit']}, {paths['flight']}")
     eng.close()
 
 

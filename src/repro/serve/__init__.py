@@ -1,4 +1,5 @@
-from .engine import Request, RejectReason, SLOSpec, ServeEngine
+from .engine import (Request, RejectReason, SLOSpec, ServeEngine,
+                     TICK_STATS_KEYS)
 from .kv_cache import KVBlockPool, kv_bytes_per_token
 from .paging import PagedKVAllocator
 from .traffic import (OpenLoopDriver, TickCostModel, TierSpec, TraceConfig,
@@ -7,6 +8,7 @@ from .traffic import (OpenLoopDriver, TickCostModel, TierSpec, TraceConfig,
 from .chaos import ChaosMonkey, ChaosSpec
 
 __all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine",
+           "TICK_STATS_KEYS",
            "KVBlockPool", "PagedKVAllocator", "kv_bytes_per_token",
            "OpenLoopDriver", "TickCostModel", "TierSpec", "TraceConfig",
            "TraceEvent", "VirtualClock", "as_requests", "concat_traces",

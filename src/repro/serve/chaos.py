@@ -85,6 +85,15 @@ class ChaosMonkey:
         engine.sensor_tap = self._tap
         return self
 
+    def _note(self, name: str) -> None:
+        """Record an injected fault — in ``events`` for the benches, and
+        on the engine's telemetry trace (instant marker + flight-recorder
+        dump) so fault <-> controller-response causality is visible in
+        one timeline."""
+        self.events.append((self._tick, name))
+        if self.engine is not None:
+            self.engine.note_chaos(name)
+
     # -- sensor corruption -------------------------------------------------
 
     def _fault_window_active(self) -> bool:
@@ -96,7 +105,7 @@ class ChaosMonkey:
     def _tap(self, name: str, value: float) -> float:
         if not self._fault_window_active() or name not in self.spec.sensor_names:
             return value
-        self.events.append((self._tick, f"sensor_{self.spec.sensor_fault_mode}:{name}"))
+        self._note(f"sensor_{self.spec.sensor_fault_mode}:{name}")
         if self.spec.sensor_fault_mode == "nan":
             return math.nan
         if self.spec.sensor_fault_mode == "spike":
@@ -115,7 +124,7 @@ class ChaosMonkey:
             self._orig_cap = float(eng.sc_kv.controller.model.conf_max)
             eng.sc_kv.clamp_conf_max(float(blocks))
         eng.set_kv_budget(blocks)
-        self.events.append((self._tick, f"budget_cut:{blocks}"))
+        self._note(f"budget_cut:{blocks}")
 
     def _restore_budget(self, eng: ServeEngine) -> None:
         if self._orig_budget is None:
@@ -124,7 +133,7 @@ class ChaosMonkey:
             eng.sc_kv.clamp_conf_max(self._orig_cap)
         else:
             eng.set_kv_budget(self._orig_budget)
-        self.events.append((self._tick, "budget_restore"))
+        self._note("budget_restore")
 
     # -- driver hook -------------------------------------------------------
 
@@ -143,13 +152,13 @@ class ChaosMonkey:
         if s.preempt_tick is not None:
             if tick == s.preempt_tick:
                 eng.preemption.trigger()
-                self.events.append((tick, "preempt"))
+                self._note("preempt")
             elif tick == s.preempt_tick + s.preempt_resume_ticks:
                 eng.preemption.reset()
-                self.events.append((tick, "resume"))
+                self._note("resume")
 
         extra = 0.0
         if s.slow_tick_prob > 0.0 and self.rng.uniform() < s.slow_tick_prob:
             extra = s.slow_tick_s
-            self.events.append((tick, "slow_tick"))
+            self._note("slow_tick")
         return extra

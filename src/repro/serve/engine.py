@@ -118,15 +118,39 @@ from repro.core import (ControllerModel, GoalSpec, Guardrails, HBMAccountant,
                         LatencySensor, SmartConfIndirect, SmartConf,
                         ThroughputSensor)
 from repro.core.smartconf import ConfRegistry
+from repro.core.telemetry import Telemetry, Tracer
 from repro.distributed.fault_tolerance import PreemptionHandler
 from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
 from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
 from .paging import PagedKVAllocator
 
-__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine"]
+__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine",
+           "TICK_STATS_KEYS"]
 
 _MIN_BUCKET = 16
+
+# The frozen TickStats schema: every dict `tick()` / `_stats()` returns has
+# exactly these keys, in exactly this order.  Telemetry, the open-loop
+# driver's cost model, the benches, and the CI JSON gates all consume this
+# dict — a key rename or reorder is a cross-layer breaking change, so the
+# schema is explicit and regression-tested (tests/test_telemetry.py)
+# instead of incidentally stable.  Add new keys at the end.
+TICK_STATS_KEYS: tuple[str, ...] = (
+    "tick",                     # engine tick ordinal (ticks_run at entry)
+    "queued", "waiting", "running", "finished", "hbm", "tokens",
+    "pad_fraction", "packed_segments", "dispatches",
+    "prefill_tokens", "prefill_issued_tokens", "decode_tokens",
+    "kv_used_blocks", "kv_budget_blocks", "kv_capacity_blocks",
+    "kv_over_budget", "kv_frag_tokens",
+    "preemptions", "admit_tier_max", "rejected", "draining",
+    "slo_good_tokens", "slo_miss_tokens",
+)
+
+# rejections in one tick at or past this count dump the flight recorder:
+# a typed-rejection storm is exactly the "why did the engine shed all of
+# that" moment the last-N-ticks sensor ring exists to answer
+_REJECT_STORM_PER_TICK = 3
 
 
 class RejectReason(str, enum.Enum):
@@ -212,7 +236,8 @@ class ServeEngine:
                  slo: SLOSpec | None = None, num_tiers: int = 3,
                  admit_tier_max: int | None = None,
                  preemption: PreemptionHandler | None = None,
-                 clock: Callable[[], float] = time.monotonic) -> None:
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry: Telemetry | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -528,6 +553,39 @@ class ServeEngine:
                                       lam=0.1, delta=1.3, conf_min=0.0,
                                       conf_max=float(self.num_tiers - 1)))
 
+        # ------------------------------------------------------- telemetry
+        # Off by default, and free when off: a disabled (or absent) hub
+        # collapses to self._tel = None, so the hot path pays exactly one
+        # `is not None` test per instrumentation point — the disabled path
+        # IS the pre-telemetry path (bench_overhead gates <1% in CI).
+        # REPRO_TELEMETRY=1 force-enables it for the CI telemetry leg
+        # without touching call sites (same pattern as REPRO_PREFILL_MODE).
+        self.ticks_run = 0
+        if telemetry is None and os.environ.get(
+                "REPRO_TELEMETRY", "").strip() not in ("", "0"):
+            telemetry = Telemetry(enabled=True, clock=clock)
+        self._tel = telemetry if (telemetry is not None
+                                  and telemetry.enabled) else None
+        self._tick_readings: dict[str, tuple[float, float]] = {}
+        if self._tel is not None:
+            # pre-create the hot-path instruments so ticks never take the
+            # registry's get-or-create branch
+            m = self._tel.metrics
+            self._tel_h_tick = m.histogram("serve.tick_latency_s")
+            self._tel_h_decode = m.histogram("serve.decode_latency_s")
+            self._tel_h_ttft = m.histogram("serve.ttft_s")
+            self._tel_c_ticks = m.counter("serve.ticks")
+            self._tel_c_tokens = m.counter("serve.tokens")
+            for reason in RejectReason:
+                m.counter(f"serve.reject.{reason}")
+            self._tick_rejects0 = 0
+            self._tel_faults_seen = 0
+            self._tel_fallback_seen: set[str] = set()
+            for sc in (self.sc_queue, self.sc_kv, self.sc_chunk,
+                       self.sc_admit):
+                if sc is not None:
+                    sc.attach_audit(self._tel.audit)
+
     # ------------------------------------------------------------------ API
     def _reject(self, req: Request, reason: RejectReason) -> RejectReason:
         """Typed rejection: the request is recorded (``shed``), counted,
@@ -537,6 +595,10 @@ class ServeEngine:
         self.rejected += 1
         self.reject_counts[str(reason)] += 1
         self.shed.append(req)
+        if self._tel is not None:
+            self._tel.metrics.counter(f"serve.reject.{reason}").inc()
+            self._tel.tracer.async_end(
+                "request", req.req_id, args={"rejected": str(reason)})
         return reason
 
     def submit(self, req: Request) -> RejectReason | None:
@@ -610,6 +672,12 @@ class ServeEngine:
         self._tick_packed_segments = 0
         self._tick_dispatches = 0
         self._tick_decode = 0
+        tel = self._tel
+        if tel is not None:
+            tel.audit.tick = self.ticks_run
+            tel.tracer.begin_tick(self.ticks_run)
+            self._tick_readings = {}
+            self._tick_rejects0 = self.rejected
         if self.preemption.triggered:
             # worker preemption: drain once (requeue every in-flight
             # request, copy-free), then idle — never crash mid-tick.  The
@@ -617,23 +685,47 @@ class ServeEngine:
             if not self._draining:
                 self._drain_for_preemption()
             self.tick_latency.record(self.clock() - t0)
-            return self._stats(0)
+            stats = self._stats(0)
+            self.ticks_run += 1
+            if tel is not None:
+                tel.tracer.phase("drain")
+                self._tel_finish_tick(stats, self.clock() - t0)
+            return stats
         self._draining = False          # preemption cleared: resume serving
+        if tel is not None:
+            tel.tracer.phase("control")
         self._update_controllers()
         self._shed_expired()
+        if tel is not None:
+            tel.tracer.phase("admit")
         self._admit()
+        if tel is not None:
+            tel.tracer.phase("schedule")
         self._schedule()
         if self.prefill_impl == "packed":
             n_tokens = self._tick_unified()
         else:
+            if tel is not None:
+                tel.tracer.phase("pack")
             self._prefill_tick()
+            if tel is not None:
+                tel.tracer.phase("dispatch")
             n_tokens = self._decode_tick()
+        if tel is not None:
+            tel.tracer.phase("finish")
         self._finish()
         self.tick_latency.record(self.clock() - t0)
-        return self._stats(n_tokens)
+        stats = self._stats(n_tokens)
+        self.ticks_run += 1
+        if tel is not None:
+            self._tel_finish_tick(stats, self.clock() - t0)
+        return stats
 
     def _stats(self, n_tokens: int) -> dict:
+        # NOTE: keys and their order are the frozen TickStats schema
+        # (TICK_STATS_KEYS, regression-tested) — extend at the end only.
         return {
+            "tick": self.ticks_run,
             "queued": len(self.queued),
             "waiting": len(self.waiting),
             "running": len(self.running) + len(self.prefilling),
@@ -674,22 +766,117 @@ class ServeEngine:
     def run(self, ticks: int) -> list[dict]:
         return [self.tick() for _ in range(ticks)]
 
+    # ----------------------------------------------------------- telemetry
+    def _tel_finish_tick(self, stats: dict, wall_dt: float) -> None:
+        """Per-tick telemetry epilogue (only reached when enabled): close
+        the tick span, fold the stats into the metrics, snapshot the
+        sensor readings into the flight-recorder ring, and dump the ring
+        on any guardrail fault, fallback engagement, or rejection storm."""
+        tel = self._tel
+        tick = stats["tick"]
+        tel.tracer.end_tick(args={
+            "tokens": stats["tokens"], "queued": stats["queued"],
+            "running": stats["running"], "rejected": stats["rejected"],
+            "admit_tier_max": stats["admit_tier_max"],
+            "draining": stats["draining"]})
+        self._tel_c_ticks.inc()
+        self._tel_c_tokens.inc(stats["tokens"])
+        if wall_dt > 0.0:
+            # wall span of the tick body; under a VirtualClock this is 0
+            # (the clock is frozen within a tick) and the open-loop driver
+            # charges the virtual cost through charge_tick_cost instead
+            self._tel_h_tick.record(wall_dt)
+        m = tel.metrics
+        m.gauge("serve.hbm_bytes").set(float(stats["hbm"]))
+        m.gauge("serve.admit_tier_max").set(float(stats["admit_tier_max"]))
+        m.gauge("serve.kv_used_blocks").set(float(stats["kv_used_blocks"]))
+        m.gauge("serve.queued_tokens").set(float(self.queued_tokens))
+        tel.flight.record(tick, dict(self._tick_readings))
+        faults = 0
+        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit):
+            if sc is None:
+                continue
+            faults += sc.sensor_faults
+            if sc.sensor_failed:
+                if sc.conf_name not in self._tel_fallback_seen:
+                    self._tel_fallback_seen.add(sc.conf_name)
+                    tel.flight.dump(f"fallback:{sc.conf_name}", tick)
+            else:
+                self._tel_fallback_seen.discard(sc.conf_name)
+        if faults > self._tel_faults_seen:
+            self._tel_faults_seen = faults
+            tel.flight.dump("guardrail_fault", tick)
+        if self.rejected - self._tick_rejects0 >= _REJECT_STORM_PER_TICK:
+            tel.flight.dump("rejection_storm", tick)
+
+    def note_chaos(self, name: str) -> None:
+        """Chaos-injection stamp (called by ChaosMonkey): the fault lands
+        on the trace timeline next to the tick it hit, counts in the
+        metrics, and dumps the flight recorder — fault <-> controller
+        response causality in one artifact set."""
+        if self._tel is None:
+            return
+        tel = self._tel
+        tel.tracer.instant(f"chaos:{name}", tid=Tracer.TID_CHAOS,
+                           args={"tick": self.ticks_run})
+        tel.metrics.counter(f"chaos.{name.split(':', 1)[0]}").inc()
+        tel.flight.dump(f"chaos:{name.split(':', 1)[0]}", self.ticks_run)
+
+    def note_arrival(self, req: Request) -> None:
+        """Driver-side arrival stamp: an instant on the driver track plus
+        the open end of the request's async lifetime span (closed at
+        finish or rejection)."""
+        if self._tel is None:
+            return
+        trc = self._tel.tracer
+        trc.instant("arrival", tid=Tracer.TID_DRIVER,
+                    args={"req": req.req_id, "tier": req.tier})
+        trc.async_begin("request", req.req_id,
+                        args={"tier": req.tier,
+                              "prompt_len": int(len(req.prompt)),
+                              "deadline_s": req.deadline_s})
+
+    def charge_tick_cost(self, dt: float, *, decoded: bool = False) -> None:
+        """Virtual-time cost feedback from the open-loop driver: the clock
+        is frozen within a tick, so the driver charges the modeled tick
+        cost into the latency sensors (and telemetry histograms) after the
+        fact — the controllers and the trace see the same virtual time the
+        requests experience."""
+        self.tick_latency.record(dt)
+        if decoded:
+            self.decode_latency.record(dt)
+        if self._tel is not None:
+            self._tel_h_tick.record(dt)
+            if decoded:
+                self._tel_h_decode.record(dt)
+
     # ------------------------------------------------------------ internals
     def _sense(self, name: str, value: float) -> float:
-        """Controller-facing sensor read, routed through the chaos tap when
-        one is installed (fault injection corrupts readings here; the
-        SmartConf guardrails must absorb whatever comes back)."""
+        """Controller-facing sensor read — the ONE road a reading takes to
+        a controller.  Routed through the chaos tap when one is installed
+        (fault injection corrupts readings here; the SmartConf guardrails
+        must absorb whatever comes back) and recorded raw+tapped into the
+        flight recorder's per-tick snapshot, so chaos, the controllers,
+        and the flight recorder all observe the identical stream.  Every
+        reading a controller consumes must pass through here — including
+        the indirect confs' deputies."""
         tap = self.sensor_tap
-        return tap(name, value) if tap is not None else value
+        out = tap(name, value) if tap is not None else value
+        if self._tel is not None:
+            self._tick_readings[name] = (value, out)
+        return out
 
     def _update_controllers(self) -> None:
         if not self.enable_smartconf:
             return
         if self.sc_queue is not None:
             hbm = self._sense("hbm_bytes", float(self.hbm_bytes()))
-            self.sc_queue.set_perf(hbm, self.queued_tokens)
+            self.sc_queue.set_perf(
+                hbm, self._sense("queued_tokens", float(self.queued_tokens)))
             self.max_queue_tokens = max(0, int(self.sc_queue.get_conf()))
-            self.sc_kv.set_perf(hbm, self.pool.used_blocks)
+            self.sc_kv.set_perf(
+                hbm,
+                self._sense("kv_used_blocks", float(self.pool.used_blocks)))
             self.pool.set_budget(max(1, int(self.sc_kv.get_conf())))
             if self.paged and self.pool.over_budget:
                 # the budget bit below occupancy: make the cut physical
@@ -730,6 +917,8 @@ class ServeEngine:
         self.ttft.record(now - req.submitted_t)
         epoch = req.queued_t if req.queued_t is not None else req.submitted_t
         self.ttft_ctrl.record(now - epoch)
+        if self._tel is not None:
+            self._tel_h_ttft.record(now - req.submitted_t)
 
     def _shed_expired(self) -> None:
         """Deadline-expired requests still waiting in line are shed with a
@@ -917,6 +1106,11 @@ class ServeEngine:
         slot, req = max(cands, key=lambda sr: (sr[1].tier, sr[1].admit_seq))
         self._requeue_slot(slot, req)
         self.preemptions += 1
+        if self._tel is not None:
+            self._tel.tracer.instant(
+                "preempt", args={"req": req.req_id, "tier": req.tier,
+                                 "tick": self.ticks_run})
+            self._tel.metrics.counter("serve.preemptions").inc()
 
     def _requeue_slot(self, slot: int, req: Request) -> None:
         """Undo a slot's in-flight work back to the queue head (state reset
@@ -953,6 +1147,12 @@ class ServeEngine:
             self._requeue_slot(slot, req)
             self.preemptions += 1
         self._draining = True
+        if self._tel is not None:
+            self._tel.tracer.instant(
+                "worker_preemption_drain",
+                args={"requeued": len(in_flight), "tick": self.ticks_run})
+            self._tel.metrics.counter("serve.preemptions").inc(
+                len(in_flight))
 
     def drained_requests(self) -> list[Request]:
         """Requests parked by a drain (queued + waiting, admission order):
@@ -1012,7 +1212,11 @@ class ServeEngine:
         cost.  The unified stream owns every tick where prefill and decode
         overlap, which is where the split path paid its second dispatch."""
         if not self.prefilling:
+            if self._tel is not None:
+                self._tel.tracer.phase("dispatch")
             return self._decode_tick()
+        if self._tel is not None:
+            self._tel.tracer.phase("pack")
         n_dec = len(self.running)
         budget = max(1, min(int(self.prefill_chunk), self.packed_width))
         demand = sum(len(r.prompt) - r.prefilled
@@ -1067,6 +1271,8 @@ class ServeEngine:
             decoders.append((slot, req))
             cursor += 1
         t_disp = self.clock()
+        if self._tel is not None:
+            self._tel.tracer.phase("dispatch")
         self.caches, self._slot_tok, self._gen_buf = self._step_unified(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(slot_id), jnp.asarray(posw), jnp.asarray(start),
@@ -1087,8 +1293,13 @@ class ServeEngine:
             # (no host transfer) so TTFT/decode latency reflect compute,
             # not async dispatch depth
             self._slot_tok.block_until_ready()
+        if self._tel is not None:
+            self._tel.tracer.phase("sample")
         if n_dec:
-            self.decode_latency.record(self.clock() - t_disp)
+            dt = self.clock() - t_disp
+            self.decode_latency.record(dt)
+            if self._tel is not None and dt > 0.0:
+                self._tel_h_decode.record(dt)
         now = self.clock()
         for slot, req, n in packed:
             req.prefilled += n
@@ -1198,12 +1409,17 @@ class ServeEngine:
         # wait (no host transfer): the sc_chunk controller acting on its
         # p99 sees real decode compute, not admission/scheduling host work
         # (that whole-tick span is tick_latency's job)
+        t_disp = self.clock()
         with self.decode_latency.measure():
             self._slot_tok, self.caches, self._gen_buf = self._decode(
                 self.params, self.caches, self._slot_tok, pos,
                 jnp.asarray(active), self._gen_buf, jnp.asarray(gidx),
                 self._bt() if self.paged else None)
             self._slot_tok.block_until_ready()
+        if self._tel is not None:
+            dt = self.clock() - t_disp
+            if dt > 0.0:
+                self._tel_h_decode.record(dt)
         self.model_dispatches += 1
         self._tick_dispatches += 1
         self._decode_dispatched = True
@@ -1237,6 +1453,11 @@ class ServeEngine:
             else:
                 self.slo_miss_requests += 1
                 self.slo_miss_tokens += len(req.generated)
+            if self._tel is not None:
+                self._tel.tracer.async_end(
+                    "request", req.req_id,
+                    args={"slo_ok": bool(req.slo_ok),
+                          "tokens": len(req.generated)})
             self.finished.append(req)
             del self.running[slot]
             self._free_slots.append(slot)

@@ -292,7 +292,12 @@ class OpenLoopDriver:
     def _submit_due(self) -> None:
         while (self.submitted < len(self.arrivals)
                and self.arrivals[self.submitted][0] <= self.clock.now):
-            self.engine.submit(self.arrivals[self.submitted][1])
+            req = self.arrivals[self.submitted][1]
+            # stamp the arrival on the trace timeline (and open the
+            # request's lifetime span) BEFORE submit, so a door rejection's
+            # span-close has its matching open
+            self.engine.note_arrival(req)
+            self.engine.submit(req)
             self.submitted += 1
 
     # -- main loop ---------------------------------------------------------
@@ -326,10 +331,10 @@ class OpenLoopDriver:
             dt = self.cost.cost(stats) + extra_s
             self.clock.advance(dt)
             # intra-tick spans were 0 on the frozen clock; charge them now
-            # so the controllers' decode_p99_s sensor sees virtual time.
-            eng.tick_latency.record(dt)
-            if stats.get("decode_tokens", 0):
-                eng.decode_latency.record(dt)
+            # so the controllers' decode_p99_s sensor (and the telemetry
+            # latency histograms) see virtual time.
+            eng.charge_tick_cost(dt,
+                                 decoded=bool(stats.get("decode_tokens", 0)))
             self.ticks += 1
 
         return self.summary(elapsed_s=self.clock.now - t0)
