@@ -82,10 +82,11 @@ def _workload(vocab: int, n_requests: int, seed: int = 7):
 def _run_engine(cfg, params, prompts, mode: str, *, max_batch: int,
                 cache_len: int, max_new: int = MAX_NEW,
                 prefill_chunk: int | None = None):
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeEngine, ServeOptions
 
-    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
-                      enable_smartconf=False, prefill_mode=mode)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=max_batch, cache_len=cache_len,
+        enable_smartconf=False, prefill_mode=mode))
     if prefill_chunk is not None and mode != "legacy":
         eng.prefill_chunk = prefill_chunk     # actuate the soft knob
     for i, p in enumerate(prompts):
@@ -129,11 +130,12 @@ def _decode_throughput(cfg, params, kv_mode: str, *, max_batch: int,
     the dense per-slot cache on the identical schedule; prefill_mode
     chooses unified (packed: decode segments ride the stream dispatch) vs
     split (bucketed: the standalone decode program) ticks."""
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeEngine, ServeOptions
 
-    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
-                      enable_smartconf=False, kv_mode=kv_mode,
-                      prefill_mode=prefill_mode)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=max_batch, cache_len=cache_len,
+        enable_smartconf=False, kv_mode=kv_mode,
+        prefill_mode=prefill_mode))
     rng = np.random.default_rng(11)
     for i in range(max_batch):
         eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
@@ -158,10 +160,11 @@ def _budget_cut(cfg, params, kv_mode: str, *, max_batch: int, cache_len: int):
     worth.  Returns (hbm_before, hbm_after, preemptions): paged engines
     preempt + physically shrink the block store; dense engines only move the
     logical threshold, so hbm is unchanged."""
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeEngine, ServeOptions
 
-    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
-                      enable_smartconf=False, kv_mode=kv_mode)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=max_batch, cache_len=cache_len,
+        enable_smartconf=False, kv_mode=kv_mode))
     rng = np.random.default_rng(13)
     for i in range(max_batch):
         eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
@@ -178,6 +181,69 @@ def _budget_cut(cfg, params, kv_mode: str, *, max_batch: int, cache_len: int):
     preempted = eng.preemptions
     eng.close()
     return hbm0, hbm1, preempted
+
+
+def _prefix_workload(vocab: int, *, groups: int = 2, followers: int = 2,
+                     prefix_len: int = 40, prompt_len: int = 56,
+                     seed: int = 17):
+    """Shared-prefix tenancy: per group, one leader + ``followers`` prompts
+    opening with the same ``prefix_len`` tokens.  ``prefix_len`` is chosen
+    OFF the block boundary (40 = 2.5 blocks of 16) so a warm hit lands
+    mid-block and the copy-on-write path is genuinely exercised, not just
+    whole-block adoption.  Returns (leaders, followers) so the caller can
+    warm the cache with the leaders before measuring the followers."""
+    rng = np.random.default_rng(seed)
+    leaders, follows = [], []
+    for _ in range(groups):
+        pre = rng.integers(1, vocab, prefix_len).astype(np.int32)
+        leaders.append(np.concatenate(
+            [pre, rng.integers(1, vocab, prompt_len - prefix_len)
+             .astype(np.int32)]))
+        for _ in range(followers):
+            follows.append(np.concatenate(
+                [pre, rng.integers(1, vocab, prompt_len - prefix_len)
+                 .astype(np.int32)]))
+    return leaders, follows
+
+
+def _prefix_cache_run(cfg, params, leaders, followers, cached: bool, *,
+                      max_batch: int, cache_len: int, max_new: int = 4):
+    """Two-phase run: the leaders warm the engine (and, when ``cached``,
+    the radix tree), then the followers are served and their prefill cost
+    measured in isolation.  Returns per-request tokens + the follower-phase
+    issued-prefill-token count and the cache counters."""
+    from repro.serve import Request, ServeEngine, ServeOptions
+
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=max_batch, cache_len=cache_len, enable_smartconf=False,
+        kv_mode="paged", prefix_cache=cached))
+    for i, p in enumerate(leaders):
+        assert eng.submit(Request(i, p, max_new))
+    ticks = 0
+    while len(eng.finished) < len(leaders) and ticks < 2000:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == len(leaders), "warmup incomplete"
+    issued0 = eng.prefill_issued_tokens
+    for j, p in enumerate(followers):
+        assert eng.submit(Request(len(leaders) + j, p, max_new))
+    while len(eng.finished) < len(leaders) + len(followers) and ticks < 4000:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == len(leaders) + len(followers), \
+        "follower phase incomplete"
+    out = {
+        "generated": {r.req_id: list(r.generated) for r in eng.finished},
+        "follower_issued": eng.prefill_issued_tokens - issued0,
+        "hit_tokens": eng.prefix_hit_tokens_total,
+        "cow_blocks": eng.cow_copied_blocks,
+        "hit_rate": (eng._prefix_cache.hit_rate
+                     if eng._prefix_cache is not None else 0.0),
+        "cache_blocks": (eng._prefix_cache.blocks_held
+                         if eng._prefix_cache is not None else 0),
+    }
+    eng.close()
+    return out
 
 
 def _sweep_modes(prefill_mode: str | None) -> list[str]:
@@ -322,6 +388,40 @@ def run(smoke: bool = False, prefill_mode: str | None = None) -> list[str]:
             f"serving_kv_budget_cut_{m}", 0.0,
             f"hbm_before={hbm0} hbm_after={hbm1} freed={hbm0 - hbm1} "
             f"preempted={pre}"))
+
+    # ---- radix prefix cache: shared-prefix tenancy -----------------------
+    # cold (no cache) vs warm (radix tree) on the identical two-phase
+    # workload: warm followers must produce bit-identical tokens while
+    # issuing >= 30% fewer prefill tokens (the reclaimed-prefill win the
+    # cache exists for), with the mid-block prefix forcing real COW copies
+    # smoke's 8-block budget fits exactly one cached group next to a live
+    # lease + its COW block; the full run exercises multi-group tenancy
+    leaders, followers = _prefix_workload(
+        cfg.vocab_size, groups=1 if smoke else 2,
+        followers=1 if smoke else 2,
+        prompt_len=min(56, cache_len - SWEEP_MAX_NEW))
+    cold = _prefix_cache_run(cfg, params, leaders, followers, False,
+                             max_batch=max_batch, cache_len=cache_len)
+    warm = _prefix_cache_run(cfg, params, leaders, followers, True,
+                             max_batch=max_batch, cache_len=cache_len)
+    assert cold["generated"] == warm["generated"], \
+        "prefix-cache hits changed generated tokens"
+    assert warm["hit_rate"] > 0.0 and warm["hit_tokens"] > 0, \
+        "warm run never hit the cache"
+    assert warm["cow_blocks"] > 0, \
+        "mid-block prefix should force copy-on-write"
+    reduction = 1.0 - warm["follower_issued"] / max(1, cold["follower_issued"])
+    assert reduction >= 0.30, \
+        f"prefix cache reclaimed only {reduction:.0%} of follower prefill"
+    rows.append(fmt_row(
+        "serving_prefix_cache", 0.0,
+        f"identical=True hit_rate={warm['hit_rate']:.2f} "
+        f"reclaimed_tokens={warm['hit_tokens']} "
+        f"cow_blocks={warm['cow_blocks']} "
+        f"cache_blocks={warm['cache_blocks']} "
+        f"issued_cold={cold['follower_issued']} "
+        f"issued_warm={warm['follower_issued']} "
+        f"prefill_reduction={reduction:.2f} (goal >=0.30)"))
 
     # ---- universal chunked prefill: the newly-unlocked families ----------
     import dataclasses

@@ -89,8 +89,8 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     from repro.core.smartconf import ConfRegistry
     from repro.core.telemetry import Telemetry
     from repro.serve import (ChaosMonkey, OpenLoopDriver, SLOSpec,
-                             ServeEngine, TickCostModel, VirtualClock,
-                             as_requests)
+                             ServeEngine, ServeOptions, TickCostModel,
+                             VirtualClock, as_requests)
 
     # fresh Request objects per policy: the engine mutates requests
     # in-place (timestamps, generated tokens, slot state), so sharing one
@@ -103,11 +103,12 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     # virtual microseconds, so the artifact set is deterministic
     tel = Telemetry(enabled=True, clock=vc) if telemetry_dir else None
     eng = ServeEngine(
-        cfg, params, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
-        block_tokens=16, enable_smartconf=adaptive,
-        slo=SLOSpec(ttft_s=TTFT_SLO_S, window=24), num_tiers=NUM_TIERS,
-        admit_tier_max=admit_tier_max, registry=ConfRegistry(), clock=vc,
-        telemetry=tel)
+        cfg, params, options=ServeOptions(
+            max_batch=MAX_BATCH, cache_len=CACHE_LEN, block_tokens=16,
+            enable_smartconf=adaptive,
+            slo=SLOSpec(ttft_s=TTFT_SLO_S, window=24), num_tiers=NUM_TIERS,
+            admit_tier_max=admit_tier_max, telemetry=tel),
+        registry=ConfRegistry(), clock=vc)
     monkey = ChaosMonkey(_chaos_spec(horizon_s)).install(eng)
     drv = OpenLoopDriver(
         eng, arrivals, clock=vc,
@@ -122,7 +123,7 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     out["chaos_schedule"] = list(monkey.events)
     out["sensor_faults"] = sum(
         sc.sensor_faults for sc in
-        (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit)
+        (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit, eng.sc_cache)
         if sc is not None)
     if tel is not None:
         out["telemetry_paths"] = tel.write(telemetry_dir)

@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced
 from repro.models import zoo
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, ServeOptions
 
 
 def main() -> None:
@@ -43,6 +43,23 @@ def main() -> None:
                     help="paged = block-table KV cache + paged decode "
                          "kernel (attention-only archs); dense = per-slot "
                          "[max_batch, cache_len] cache")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over refcounted paged KV "
+                         "blocks: requests whose prompts share a cached "
+                         "prefix skip straight to the uncovered suffix "
+                         "(copy-on-write at the block boundary); the "
+                         "cache's share of the block budget is the "
+                         "SmartConf-actuated serve.kv_cache_share knob. "
+                         "Requires paged KV")
+    ap.add_argument("--kv-cache-share", type=float, default=0.5,
+                    help="initial fraction of the KV block budget the "
+                         "prefix cache may hold (SmartConf adjusts it)")
+    ap.add_argument("--prefix-groups", type=int, default=0,
+                    help="with --trace: number of shared-prefix tenant "
+                         "groups in the synthesized workload (0 = none)")
+    ap.add_argument("--prefix-len", type=int, default=32,
+                    help="with --trace: common preamble length (tokens) "
+                         "for each prefix group")
     ap.add_argument("--full-size", action="store_true")
     # open-loop trace mode (serve/README.md): arrivals at trace rate on a
     # virtual clock, tier gating + SLO accounting + optional fault injection
@@ -85,10 +102,11 @@ def main() -> None:
     if args.telemetry_dir:
         from repro.core.telemetry import Telemetry
         tel = Telemetry(enabled=True)
-    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len, hbm_budget_bytes=budget,
-                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode,
-                      telemetry=tel)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=args.max_batch, cache_len=args.cache_len,
+        hbm_budget_bytes=budget, prefill_mode=args.prefill_mode,
+        kv_mode=args.kv_mode, prefix_cache=args.prefix_cache,
+        kv_cache_share=args.kv_cache_share, telemetry=tel))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -106,7 +124,12 @@ def main() -> None:
           f"{eng.model_dispatches/max(1, ticks):.2f} dispatches/tick, "
           f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
-          f"{eng.preemptions} preemptions")
+          f"{eng.preemptions} preemptions"
+          + (f"; prefix cache {eng._prefix_cache.blocks_held} blocks held, "
+             f"hit rate {eng._prefix_cache.hit_rate:.2f}, "
+             f"{eng.prefix_hit_tokens_total} prefill tokens reclaimed, "
+             f"{eng.cow_copied_blocks} COW copies"
+             if eng._prefix_cache is not None else ""))
     if tel is not None:
         paths = tel.write(args.telemetry_dir)
         print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "
@@ -125,13 +148,16 @@ def _run_trace(cfg, params, budget: int, args) -> None:
     if args.telemetry_dir:
         from repro.core.telemetry import Telemetry
         tel = Telemetry(enabled=True, clock=vc)  # virtual-time timestamps
-    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len, hbm_budget_bytes=budget,
-                      prefill_mode=args.prefill_mode, kv_mode=args.kv_mode,
-                      slo=slo, clock=vc, telemetry=tel)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=args.max_batch, cache_len=args.cache_len,
+        hbm_budget_bytes=budget, prefill_mode=args.prefill_mode,
+        kv_mode=args.kv_mode, prefix_cache=args.prefix_cache,
+        kv_cache_share=args.kv_cache_share, slo=slo, telemetry=tel),
+        clock=vc)
     trace = synthesize_trace(TraceConfig(
         process=args.trace, rate_rps=args.rate_rps,
-        horizon_s=args.horizon_s, seed=args.seed))
+        horizon_s=args.horizon_s, seed=args.seed,
+        prefix_groups=args.prefix_groups, prefix_len=args.prefix_len))
     chaos = None
     if args.chaos:
         chaos = ChaosMonkey(ChaosSpec(
@@ -154,7 +180,10 @@ def _run_trace(cfg, params, budget: int, args) -> None:
           f"{out['preemptions']} preemptions, "
           f"recompute {out['recompute_tokens']} tokens, "
           f"chaos events {len(chaos.events) if chaos else 0}, "
-          f"unhandled {len(out['unhandled'])}")
+          f"unhandled {len(out['unhandled'])}"
+          + (f"; prefix cache hit rate {eng._prefix_cache.hit_rate:.2f}, "
+             f"{eng.prefix_hit_tokens_total} prefill tokens reclaimed"
+             if eng._prefix_cache is not None else ""))
     if tel is not None:
         paths = tel.write(args.telemetry_dir)
         print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "

@@ -140,6 +140,23 @@ def _paged_scatter(cache, k, v, pos, valid, block_tables, seg=None):
     }
 
 
+def paged_copy_blocks(cache, src, dst, block_axis: int = 0):
+    """Copy whole physical blocks ``src[i] -> dst[i]`` within one layer's
+    block store — the device side of ``KVLease.writable`` copy-on-write
+    resolution: before a borrower writes into a block it shares with the
+    prefix cache (or a forked lease), the engine re-homes the block and
+    copies the shared bytes here.  ``src``/``dst`` are [P] int32 physical
+    ids; the gather happens before the scatter, so a source is read at its
+    pre-copy value even under donation.  Duplicate pairs are allowed (the
+    engine pads the pair list to a power-of-two shape by repeating one
+    pair — both writes carry identical bytes)."""
+    def cp(a):
+        vals = jnp.take(a, src, axis=block_axis)
+        idx = (slice(None),) * block_axis + (dst,)
+        return a.at[idx].set(vals)
+    return {"k": cp(cache["k"]), "v": cp(cache["v"])}
+
+
 def _paged_view(cache, block_tables):
     """Materialize the logical [B, M*T, Kv, D] K/V view plus its position
     plane (-1 behind unallocated table entries) — the XLA twin of the paged

@@ -451,6 +451,24 @@ def map_paged_caches(caches, fn):
     return out
 
 
+def copy_paged_blocks(caches, src, dst):
+    """Block-level copy-on-write across every layer of a paged cache tree:
+    physical blocks ``src[i] -> dst[i]`` in each store plane (the engine
+    jits this with cache donation and applies it before a lease's first
+    write into a shared block — see ``KVLease.writable``)."""
+    out = dict(caches)
+    if "prefix" in caches:
+        out["prefix"] = [B.paged_copy_blocks(c, src, dst)
+                         for c in caches["prefix"]]
+    if "groups" in caches:
+        out["groups"] = [B.paged_copy_blocks(c, src, dst, block_axis=1)
+                         for c in caches["groups"]]
+    if "rem" in caches:
+        out["rem"] = [B.paged_copy_blocks(c, src, dst)
+                      for c in caches["rem"]]
+    return out
+
+
 def prefill_chunk(cfg, params, caches, tokens, start, lengths,
                   block_tables=None):
     """Advance prefill by one padded chunk per batch row, in place.

@@ -12,8 +12,8 @@ from . import transformer
 __all__ = ["init", "loss_fn", "forward", "prefill", "prefill_chunk",
            "prefill_packed", "step_packed", "supports_chunked_prefill",
            "supports_paged_kv", "decode_step", "init_cache",
-           "init_paged_cache", "map_paged_caches", "make_batch",
-           "input_specs"]
+           "init_paged_cache", "map_paged_caches", "copy_paged_blocks",
+           "make_batch", "input_specs"]
 
 init = transformer.init
 loss_fn = transformer.loss_fn
@@ -28,6 +28,7 @@ decode_step = transformer.decode_step
 init_cache = transformer.init_cache
 init_paged_cache = transformer.init_paged_cache
 map_paged_caches = transformer.map_paged_caches
+copy_paged_blocks = transformer.copy_paged_blocks
 
 
 def token_seq_len(cfg: ArchConfig, seq_len: int) -> int:

@@ -1,15 +1,17 @@
-from .engine import (Request, RejectReason, SLOSpec, ServeEngine,
-                     TICK_STATS_KEYS)
-from .kv_cache import KVBlockPool, kv_bytes_per_token
-from .paging import PagedKVAllocator
+from .engine import (Admission, Request, RejectReason, SLOSpec, ServeEngine,
+                     ServeOptions, TICK_STATS_KEYS)
+from .kv_cache import DenseKVLease, KVBlockPool, kv_bytes_per_token
+from .paging import KVLease, PagedKVAllocator
+from .prefix_cache import PrefixCache
 from .traffic import (OpenLoopDriver, TickCostModel, TierSpec, TraceConfig,
                       TraceEvent, VirtualClock, as_requests, concat_traces,
                       synthesize_trace)
 from .chaos import ChaosMonkey, ChaosSpec
 
-__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine",
-           "TICK_STATS_KEYS",
-           "KVBlockPool", "PagedKVAllocator", "kv_bytes_per_token",
+__all__ = ["Admission", "Request", "RejectReason", "SLOSpec", "ServeEngine",
+           "ServeOptions", "TICK_STATS_KEYS",
+           "DenseKVLease", "KVBlockPool", "KVLease", "PagedKVAllocator",
+           "PrefixCache", "kv_bytes_per_token",
            "OpenLoopDriver", "TickCostModel", "TierSpec", "TraceConfig",
            "TraceEvent", "VirtualClock", "as_requests", "concat_traces",
            "synthesize_trace",

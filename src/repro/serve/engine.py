@@ -123,10 +123,12 @@ from repro.distributed.fault_tolerance import PreemptionHandler
 from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
 from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
+from .options import ServeOptions, SLOSpec
 from .paging import PagedKVAllocator
+from .prefix_cache import PrefixCache
 
-__all__ = ["Request", "RejectReason", "SLOSpec", "ServeEngine",
-           "TICK_STATS_KEYS"]
+__all__ = ["Admission", "Request", "RejectReason", "SLOSpec", "ServeEngine",
+           "ServeOptions", "TICK_STATS_KEYS"]
 
 _MIN_BUCKET = 16
 
@@ -145,6 +147,9 @@ TICK_STATS_KEYS: tuple[str, ...] = (
     "kv_over_budget", "kv_frag_tokens",
     "preemptions", "admit_tier_max", "rejected", "draining",
     "slo_good_tokens", "slo_miss_tokens",
+    # appended (prefix cache PR): reclaimed prefill tokens this tick, the
+    # radix tree's held blocks, and the live cache share of the budget
+    "prefix_hit_tokens", "prefix_cache_blocks", "kv_cache_share",
 )
 
 # rejections in one tick at or past this count dump the flight recorder:
@@ -170,20 +175,24 @@ class RejectReason(str, enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
-class SLOSpec:
-    """Serving-level objectives the engine is *measured* against.
+class Admission:
+    """Typed result of :meth:`ServeEngine.submit`.
 
-    ``ttft_s`` is the per-request TTFT bound: a finished request only counts
-    toward goodput if its own TTFT met it, and the fleet goal the
-    ``serve.admit_tier_max`` brownout controller drives is TTFT-p99 <=
-    ``ttft_s``.  ``decode_s`` (optional) is the decode-latency p99 goal the
-    ``serve.prefill_chunk_tokens`` controller targets.  ``window`` sizes the
-    SLO latency sensors: small enough that the controllers see the current
-    regime, not a stale mix across a load shift."""
+    Callers used to null-check a bare ``RejectReason | None``; this carries
+    the decision (``accepted`` — also the truth value), the typed
+    ``reason`` when refused, and two advisory facts about the accepted
+    request: ``prefix_hit_tokens`` (prompt tokens the radix cache could
+    currently serve — the actual grant happens at schedule time, so this
+    is a hint, not a promise) and ``footprint_blocks`` (KV blocks the
+    request will need resident)."""
 
-    ttft_s: float
-    decode_s: float | None = None
-    window: int = 64
+    accepted: bool
+    reason: RejectReason | None = None
+    prefix_hit_tokens: int = 0
+    footprint_blocks: int = 0
+
+    def __bool__(self) -> bool:
+        return self.accepted
 
 
 def _one_shot_reason(cfg: ArchConfig) -> str:
@@ -224,42 +233,50 @@ class Request:
     preempted: int = 0          # times this request was kicked back to queue
     reject_reason: RejectReason | None = None
     slo_ok: bool | None = None  # set at completion: counted toward goodput?
+    lease: object | None = None  # KVLease/DenseKVLease while scheduled
+    prefix_hit: int = 0         # prompt tokens served from the radix cache
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
-                 cache_len: int = 256, hbm_budget_bytes: int | None = None,
-                 block_tokens: int = 16, enable_smartconf: bool = True,
-                 latency_goal_s: float | None = None,
+    def __init__(self, cfg: ArchConfig, params, *,
+                 options: ServeOptions | None = None,
                  registry: ConfRegistry | None = None,
-                 prefill_mode: str = "auto", kv_mode: str = "auto",
-                 slo: SLOSpec | None = None, num_tiers: int = 3,
-                 admit_tier_max: int | None = None,
                  preemption: PreemptionHandler | None = None,
                  clock: Callable[[], float] = time.monotonic,
-                 telemetry: Telemetry | None = None) -> None:
+                 telemetry: Telemetry | None = None, **kwargs) -> None:
+        # config lives in ServeOptions (the typed bag; resolve() is the one
+        # env-reading point).  The legacy keyword surface still works: bare
+        # kwargs build a ServeOptions here, so ServeEngine(cfg, params,
+        # max_batch=8, kv_mode="paged") and ServeEngine(cfg, params,
+        # options=ServeOptions(...)) are the same engine.
+        if options is None:
+            options = ServeOptions(**kwargs)
+        elif kwargs:
+            raise TypeError(
+                "pass configuration via options=ServeOptions(...) OR bare "
+                f"kwargs, not both (got {sorted(kwargs)})")
+        opts = self.options = options.resolve()
+        max_batch = opts.max_batch
+        hbm_budget_bytes = opts.hbm_budget_bytes
+        block_tokens = opts.block_tokens
+        enable_smartconf = opts.enable_smartconf
+        latency_goal_s = opts.latency_goal_s
+        prefill_mode, kv_mode = opts.prefill_mode, opts.kv_mode
+        slo, num_tiers = opts.slo, opts.num_tiers
+        admit_tier_max = opts.admit_tier_max
+        env_forced = opts.prefill_env_forced
+        if telemetry is None:
+            telemetry = opts.telemetry
+
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         # dense decode tiles the KV axis by block_kv: a cache_len that is
         # not a tile multiple would re-pad K/V with jnp.pad on every decode
         # call, so round the allocation up once here instead
-        self.cache_len = cache_len = padded_cache_len(cache_len)
+        self.cache_len = cache_len = padded_cache_len(opts.cache_len)
         self.clock = clock
 
-        if prefill_mode == "one_shot":          # CLI-facing alias
-            prefill_mode = "legacy"
-        env_forced = False
-        if prefill_mode == "auto":
-            # CI matrix toggle (like REPRO_*_IMPL): re-route what `auto`
-            # resolves to without touching explicit mode requests; a
-            # blanket toggle falls back (loudly) on archs that cannot serve
-            # it, where an explicit request raises
-            env = os.environ.get("REPRO_PREFILL_MODE", "").strip() or "auto"
-            env = "legacy" if env == "one_shot" else env
-            if env != "auto":
-                env_forced = True
-                prefill_mode = env
         if prefill_mode not in ("auto", "packed", "bucketed", "legacy"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if (prefill_mode in ("packed", "bucketed")
@@ -325,6 +342,33 @@ class ServeEngine:
                                     max_blocks=2**30,
                                     accountant=self.accountant)
         self.registry = registry or ConfRegistry()
+
+        # ------------------------------------------- radix prefix cache
+        # opt-in; needs the refcounted paged allocator (leases + COW)
+        if opts.prefix_cache and not self.paged:
+            raise ValueError(
+                f"{cfg.name}: prefix_cache requires paged KV "
+                "(kv_mode='paged' on an attention-only arch)")
+        self._prefix_cache = PrefixCache(self.pool) if opts.prefix_cache \
+            else None
+        if self._prefix_cache is not None:
+            self.pool.remap_hook = self._prefix_cache.remap
+        self.kv_cache_share = float(opts.kv_cache_share)
+        self.prefix_hit_tokens_total = 0   # reclaimed prefill tokens
+        self.cow_copied_blocks = 0
+        self._tick_prefix_hit = 0
+        # windowed token-weighted hit rate: the sc_cache controller sensor
+        self._hit_window: collections.deque[tuple[int, int]] = \
+            collections.deque(maxlen=slo.window if slo is not None else 64)
+        # block-level sliding-window eviction: only when EVERY attention
+        # layer is windowed (a single global layer needs the whole history
+        # resident) and the prefix cache is off (trimmed blocks cannot be
+        # shared — the two policies are mutually exclusive by construction)
+        kinds = {k.split("+")[0] for k in cfg.block_pattern}
+        self._window_evict = (self.paged and opts.window_evict
+                              and self._prefix_cache is None
+                              and kinds <= {"swa", "local"}
+                              and bool(cfg.window))
 
         # engine state
         self.waiting: collections.deque[Request] = collections.deque()
@@ -438,6 +482,12 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
         self._merge = jax.jit(merge_fn, donate_argnums=(0,))
+        # COW resolution: whole-block device copies applied before a lease
+        # writes into a block it shares with the prefix cache (pair lists
+        # are padded to power-of-two lengths, so compiles stay O(log))
+        self._copy_blocks = jax.jit(
+            lambda c, s, d: zoo.copy_paged_blocks(c, s, d),
+            donate_argnums=(0,)) if self.paged else None
 
         # sensors (share the injected clock so tests can be deterministic).
         # tick_latency spans the WHOLE tick (admit + schedule + compute +
@@ -478,7 +528,8 @@ class ServeEngine:
         # chaos hook: every sensor reading the controllers consume passes
         # through the tap (fault injection corrupts here; the SmartConf
         # guardrails are what must absorb it)
-        self.sensor_tap: Callable[[str, float], float] | None = None
+        self.sensor_tap: Callable[[str, float], float] | None = \
+            opts.sensor_tap
         # worker-preemption wiring (distributed.fault_tolerance): on
         # trigger the engine drains — requeues every in-flight request and
         # refuses new work with a typed reason — instead of crashing
@@ -495,6 +546,7 @@ class ServeEngine:
         self.sc_kv = None
         self.sc_chunk = None
         self.sc_admit = None
+        self.sc_cache = None
         # sensor-sanity guardrails for every serve controller: a dropped-out
         # or chaos-corrupted sensor (NaN, negative, physically impossible
         # spike) must never reach Eq. 2 — after 3 consecutive insane
@@ -552,6 +604,27 @@ class ServeEngine:
                 model=ControllerModel(alpha=0.5 * float(slo.ttft_s),
                                       lam=0.1, delta=1.3, conf_min=0.0,
                                       conf_max=float(self.num_tiers - 1)))
+        if enable_smartconf and self._prefix_cache is not None:
+            # cache-share controller: serve.kv_cache_share is a direct
+            # PerfConf on the windowed token-weighted prefix hit rate with
+            # a LOWER-direction goal (the hit rate should stay above it).
+            # alpha > 0: granting the cache a larger share of the block
+            # budget retains more prefixes and raises the hit rate.  The
+            # guardrails pin the sensor to [0, 1] (a rate) and slew-clamp
+            # one actuation to a tenth of the knob span; the knob itself is
+            # continuous (integer=False) in [0.05, 0.9] — the cache never
+            # starves resident sequences entirely, and never vanishes so
+            # abruptly the hit-rate sensor loses its signal.
+            self.sc_cache = SmartConf(
+                "serve.kv_cache_share", metric="prefix_hit_rate",
+                goal=GoalSpec(float(opts.prefix_hit_rate_goal),
+                              direction="lower"),
+                initial=self.kv_cache_share, registry=self.registry,
+                guardrails=Guardrails(perf_lo=0.0, perf_hi=1.0,
+                                      max_step=0.1),
+                model=ControllerModel(alpha=1.0, lam=0.05, delta=1.2,
+                                      conf_min=0.05, conf_max=0.9,
+                                      integer=False))
 
         # ------------------------------------------------------- telemetry
         # Off by default, and free when off: a disabled (or absent) hub
@@ -561,8 +634,7 @@ class ServeEngine:
         # REPRO_TELEMETRY=1 force-enables it for the CI telemetry leg
         # without touching call sites (same pattern as REPRO_PREFILL_MODE).
         self.ticks_run = 0
-        if telemetry is None and os.environ.get(
-                "REPRO_TELEMETRY", "").strip() not in ("", "0"):
+        if telemetry is None and opts.telemetry_env:
             telemetry = Telemetry(enabled=True, clock=clock)
         self._tel = telemetry if (telemetry is not None
                                   and telemetry.enabled) else None
@@ -582,7 +654,7 @@ class ServeEngine:
             self._tel_faults_seen = 0
             self._tel_fallback_seen: set[str] = set()
             for sc in (self.sc_queue, self.sc_kv, self.sc_chunk,
-                       self.sc_admit):
+                       self.sc_admit, self.sc_cache):
                 if sc is not None:
                     sc.attach_audit(self._tel.audit)
 
@@ -601,30 +673,44 @@ class ServeEngine:
                 "request", req.req_id, args={"rejected": str(reason)})
         return reason
 
-    def submit(self, req: Request) -> RejectReason | None:
-        """Validate + enqueue; returns ``None`` on acceptance or the typed
-        :class:`RejectReason` the request was refused with.  Invalid work is
-        rejected *here*, at the door — an empty prompt, a prompt that cannot
-        fit the KV ring, or a footprint no block budget could ever hold
-        would otherwise crash (or silently spin) the scheduler mid-tick."""
+    def submit(self, req: Request) -> Admission:
+        """Validate + enqueue; returns a typed :class:`Admission` receipt
+        (truthy on acceptance, carrying the reject reason otherwise, plus
+        the request's block footprint and — when the prefix cache is on —
+        an advisory count of prompt tokens a cache hit would cover right
+        now).  Invalid work is rejected *here*, at the door — an empty
+        prompt, a prompt that cannot fit the KV ring, or a footprint no
+        block budget could ever hold would otherwise crash (or silently
+        spin) the scheduler mid-tick."""
         req.prompt_bytes = len(req.prompt) * QUEUE_TOKEN_BYTES
         req.submitted_t = self.clock()
+        fp = self._footprint_blocks(req)
         if self._draining or self.preemption.triggered:
-            return self._reject(req, RejectReason.DRAINING)
+            return Admission(False, self._reject(req, RejectReason.DRAINING),
+                             footprint_blocks=fp)
         if len(req.prompt) == 0:
-            return self._reject(req, RejectReason.EMPTY_PROMPT)
+            return Admission(False,
+                             self._reject(req, RejectReason.EMPTY_PROMPT),
+                             footprint_blocks=fp)
         npatch = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
         total = npatch + len(req.prompt) + req.max_new_tokens
         if total > self.cache_len:
             # beyond cache_len the KV ring wraps (prompt history or sampled
             # tokens silently fall out) — shed loudly instead
-            return self._reject(req, RejectReason.PROMPT_TOO_LONG)
-        if self._footprint_blocks(req) > self._kv_budget_ceiling():
+            return Admission(False,
+                             self._reject(req, RejectReason.PROMPT_TOO_LONG),
+                             footprint_blocks=fp)
+        if fp > self._kv_budget_ceiling():
             # no admission order could ever schedule this request under the
             # block budget: refusing now beats queueing it to spin forever
-            return self._reject(req, RejectReason.KV_FOOTPRINT)
+            return Admission(False,
+                             self._reject(req, RejectReason.KV_FOOTPRINT),
+                             footprint_blocks=fp)
+        hit = (self._prefix_cache.probe(req.prompt)
+               if self._prefix_cache is not None else 0)
         self.waiting.append(req)
-        return None
+        return Admission(True, None, prefix_hit_tokens=hit,
+                         footprint_blocks=fp)
 
     def _footprint_blocks(self, req: Request) -> int:
         """KV blocks the request needs resident while running."""
@@ -672,6 +758,7 @@ class ServeEngine:
         self._tick_packed_segments = 0
         self._tick_dispatches = 0
         self._tick_decode = 0
+        self._tick_prefix_hit = 0
         tel = self._tel
         if tel is not None:
             tel.audit.tick = self.ticks_run
@@ -714,6 +801,8 @@ class ServeEngine:
         if tel is not None:
             tel.tracer.phase("finish")
         self._finish()
+        if self._window_evict:
+            self._trim_windows()
         self.tick_latency.record(self.clock() - t0)
         stats = self._stats(n_tokens)
         self.ticks_run += 1
@@ -761,6 +850,12 @@ class ServeEngine:
             "draining": self._draining,
             "slo_good_tokens": self.slo_good_tokens,
             "slo_miss_tokens": self.slo_miss_tokens,
+            # prefix-cache sensors (radix tree over refcounted blocks)
+            "prefix_hit_tokens": self._tick_prefix_hit,
+            "prefix_cache_blocks": (self._prefix_cache.blocks_held
+                                    if self._prefix_cache is not None
+                                    else 0),
+            "kv_cache_share": self.kv_cache_share,
         }
 
     def run(self, ticks: int) -> list[dict]:
@@ -793,7 +888,8 @@ class ServeEngine:
         m.gauge("serve.queued_tokens").set(float(self.queued_tokens))
         tel.flight.record(tick, dict(self._tick_readings))
         faults = 0
-        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit):
+        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit,
+                   self.sc_cache):
             if sc is None:
                 continue
             faults += sc.sensor_faults
@@ -904,6 +1000,18 @@ class ServeEngine:
             self.sc_admit.set_perf(
                 self._sense("ttft_p99_s", self.ttft_ctrl.p99()))
             self.admit_tier_max = int(self.sc_admit.get_conf())
+        if self.sc_cache is not None and self._hit_window:
+            # token-weighted hit rate over the recent admission window:
+            # raw per-lookup hit counts overweight short prompts, and the
+            # reclaimed capacity the share buys is proportional to tokens.
+            # No admissions yet -> no observation -> no actuation (a cold
+            # window is not evidence the share is wrong)
+            hw = self._hit_window
+            rate = sum(h for h, _ in hw) / max(1, sum(p for _, p in hw))
+            self.sc_cache.set_perf(self._sense("prefix_hit_rate", rate))
+            self.kv_cache_share = float(self.sc_cache.get_conf())
+            self._prefix_cache.enforce(
+                int(self.kv_cache_share * self.pool.max_blocks))
 
     def _stamp_first_token(self, req: Request, now: float) -> None:
         """One TTFT sample per request, at the first compute response
@@ -1016,13 +1124,8 @@ class ServeEngine:
                 self.accountant.credit("queue", req.prompt_bytes)
                 self._reject(req, RejectReason.KV_FOOTPRINT)
                 continue
-            if self.paged and (self.pool.free_blocks
-                               < -(-need // self.pool.block_tokens)):
-                # store smaller than demand (start-small under an HBM goal,
-                # or shrunk by an earlier cut): grow it first so a free-list
-                # miss is never miscounted as an allocation failure
-                self._grow_store_for(need)
-            if not self.pool.ensure(req.req_id, need):
+            lease, hit = self._lease_for(req, need)
+            if lease is None:
                 break  # KV budget exhausted; stay queued
             self.queued.popleft()
             self.queued_tokens -= len(req.prompt)
@@ -1030,14 +1133,68 @@ class ServeEngine:
             req.slot = self._free_slots.popleft()
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
+            req.lease = lease
+            req.prefix_hit = hit
+            req.prefilled = hit      # cached prefix: skip to the suffix
+            if hit:
+                self.prefix_hit_tokens_total += hit
+                self._tick_prefix_hit += hit
+            if self._prefix_cache is not None:
+                self._hit_window.append((hit, len(req.prompt)))
             if self.paged:
-                self._bt_np[req.slot] = self.pool.table_row(req.req_id)
+                self._bt_np[req.slot] = lease.table_row()
                 self._bt_dirty = True
             if self.fused_prefill:
                 self.prefilling[req.slot] = req
             else:
                 self._do_prefill_legacy(req)
                 self.running[req.slot] = req
+
+    def _lease_for(self, req: Request,
+                   need: int) -> tuple[object | None, int]:
+        """Acquire the request's KV lease, adopting any cached prefix and
+        materializing the COW boundary copy.  On allocation failure the
+        coldest cached prefix is evicted and the acquisition retried — cold
+        cache yields before live traffic waits (and long before anything is
+        preempted).  Returns ``(lease, prefix_hit_tokens)`` or
+        ``(None, 0)`` when the budget genuinely cannot hold the request."""
+        cache = self._prefix_cache
+        T = self.pool.block_tokens
+        while True:
+            if cache is not None:
+                hit, shared = cache.lookup(req.prompt, self.ticks_run)
+            else:
+                hit, shared = 0, []
+            fresh = -(-need // T) - len(shared)
+            if self.paged and self.pool.free_blocks < fresh:
+                # store smaller than demand (start-small under an HBM goal,
+                # or shrunk by an earlier cut): grow it first so a free-list
+                # miss is never miscounted as an allocation failure
+                self._grow_store_for(fresh * T)
+            lease = self.pool.lease(need, shared=shared or None)
+            if lease is not None:
+                pairs = lease.writable(hit, need) if hit else []
+                if pairs is not None:
+                    if pairs:
+                        self._apply_cow(pairs)
+                    return lease, hit
+                lease.release()    # COW target blocks unavailable: retry
+            if cache is None or cache.evict_lru_leaf() == 0:
+                return None, 0
+
+    def _apply_cow(self, pairs: list[tuple[int, int]]) -> None:
+        """Materialize copy-on-write: one fused gather/scatter duplicates
+        each shared source block into its private replacement *before* this
+        tick's writes touch the lease.  The pair list is padded to its
+        power-of-two bucket by REPEATING the last real pair — a duplicated
+        copy writes identical bytes and is shape-stable, whereas a (0, 0)
+        filler could collide with a real destination block."""
+        n = len(pairs)
+        pad = pairs + [pairs[-1]] * (_bucket(n) - n)
+        src = jnp.asarray(np.asarray([p[0] for p in pad], np.int32))
+        dst = jnp.asarray(np.asarray([p[1] for p in pad], np.int32))
+        self.caches = self._copy_blocks(self.caches, src, dst)
+        self.cow_copied_blocks += n
 
     # --------------------------------------------- paged KV: physical budget
     def _bt(self) -> jnp.ndarray:
@@ -1055,6 +1212,13 @@ class ServeEngine:
             self._enforce_kv_budget()
 
     def _enforce_kv_budget(self) -> None:
+        # a budget cut lands on the cache first: cold cached prefixes are
+        # speculative capacity and yield before any live work is undone
+        cache = self._prefix_cache
+        while (cache is not None and self.pool.over_budget
+               and cache.blocks_held > 0):
+            if cache.evict_lru_leaf() == 0:
+                break
         while self.pool.over_budget and (self.running or self.prefilling):
             self._preempt_lowest_priority()
         bps = self.blocks_per_seq
@@ -1067,7 +1231,7 @@ class ServeEngine:
                 self.caches, lambda a, ax: jnp.take(a, keep, axis=ax))
             for reqs in (self.prefilling, self.running):
                 for slot, req in reqs.items():
-                    self._bt_np[slot] = self.pool.table_row(req.req_id)
+                    self._bt_np[slot] = req.lease.table_row()
             self._bt_dirty = True
 
     def _grow_store_for(self, tokens: int) -> bool:
@@ -1117,15 +1281,23 @@ class ServeEngine:
         to prefilled=0: recompute on readmission, counted)."""
         self.prefilling.pop(slot, None)
         self.running.pop(slot, None)
-        self.pool.free(req.req_id)
+        if req.lease is not None:
+            # COW-safe: release only drops THIS lease's references — blocks
+            # the radix tree still holds stay resident for future hits
+            req.lease.release()
+            req.lease = None
         self._free_slots.append(slot)
         self.slot_pos[slot] = -1
         if self.paged:
             self._bt_np[slot] = -1
             self._bt_dirty = True
         req.slot = None
-        self.recompute_tokens += req.prefilled + req.gen_count
+        # cache-covered tokens were never computed, so they are not
+        # recompute debt; the suffix and generated tokens are
+        self.recompute_tokens += (req.prefilled - req.prefix_hit
+                                  + req.gen_count)
         req.prefilled = 0
+        req.prefix_hit = 0
         req.gen_count = 0
         req.generated = []
         req.preempted += 1
@@ -1309,6 +1481,7 @@ class ServeEngine:
                 self._stamp_first_token(req, now)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
+                self._cache_insert(req)
         for slot, req in decoders:
             self.slot_pos[slot] += 1
             req.gen_count += 1
@@ -1362,6 +1535,19 @@ class ServeEngine:
                 self._stamp_first_token(req, now)
                 self.slot_pos[slot] = len(req.prompt)
                 self.running[slot] = self.prefilling.pop(slot)
+                self._cache_insert(req)
+
+    def _cache_insert(self, req: Request) -> None:
+        """Prefill-complete hook: adopt the finished prompt's full-block
+        prefix into the radix tree (one refcount per block; decode and any
+        partial tail land strictly beyond the inserted blocks, so tree-held
+        KV is immutable), then hold the tree to its SmartConf-actuated
+        share of the block budget."""
+        cache = self._prefix_cache
+        if cache is None or req.lease is None:
+            return
+        if cache.insert(req.prompt, req.lease.blocks, self.ticks_run):
+            cache.enforce(int(self.kv_cache_share * self.pool.max_blocks))
 
     # ------------------------------------------------ legacy one-shot prefill
     def _do_prefill_legacy(self, req: Request) -> None:
@@ -1461,11 +1647,38 @@ class ServeEngine:
             self.finished.append(req)
             del self.running[slot]
             self._free_slots.append(slot)
-            self.pool.free(req.req_id)
+            if req.lease is not None:
+                req.lease.release()
+                req.lease = None
             self.slot_pos[slot] = -1
             if self.paged:
                 self._bt_np[slot] = -1
                 self._bt_dirty = True
+
+    def _trim_windows(self) -> None:
+        """Block-level sliding-window eviction (all-window archs only):
+        blocks wholly below every live position's attention window return
+        to the pool, and their table entries go to -1 — the paged gather
+        masks them, so the kernel never reads a freed block.  The keep
+        point is conservative by up to one block (``cur - window`` even
+        mid-block) so a token still inside any window is never dropped.
+        Mutually exclusive with the prefix cache: a trimmed lease's blocks
+        are position-holed and cannot be adopted as a shared prefix."""
+        w = int(self.cfg.window)
+        T = self.pool.block_tokens
+        changed = False
+        for reqs in (self.prefilling, self.running):
+            for slot, req in reqs.items():
+                if req.lease is None:
+                    continue
+                cur = (int(self.slot_pos[slot])
+                       if self.slot_pos[slot] >= 0 else req.prefilled)
+                first_keep = max(0, cur - w) // T
+                if req.lease.trim_front(first_keep):
+                    self._bt_np[slot] = req.lease.table_row()
+                    changed = True
+        if changed:
+            self._bt_dirty = True
 
     def _meets_slo(self, req: Request) -> bool:
         """Goodput-under-SLO membership: the request's own TTFT met the SLO
@@ -1490,6 +1703,7 @@ class ServeEngine:
         if self._closed:          # idempotent: drain paths may close twice
             return
         self._closed = True
-        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit):
+        for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit,
+                   self.sc_cache):
             if sc is not None:
                 sc.close()

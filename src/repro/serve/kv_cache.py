@@ -14,7 +14,8 @@ import dataclasses
 from repro.configs.base import ArchConfig
 from repro.core.sensors import HBMAccountant
 
-__all__ = ["KVBlockPool", "kv_bytes_per_token", "QUEUE_TOKEN_BYTES"]
+__all__ = ["DenseKVLease", "KVBlockPool", "kv_bytes_per_token",
+           "QUEUE_TOKEN_BYTES"]
 
 # Host+device bytes one *queued* prompt token holds (int32 token + int32
 # label/scratch view).  Both the admission-queue deputy accounting in
@@ -46,6 +47,31 @@ class _Seq:
     tokens: int = 0     # logical tokens covered (for fragmentation stats)
 
 
+class DenseKVLease:
+    """Dense-mode twin of :class:`~repro.serve.paging.KVLease`: the same
+    ``extend`` / ``release`` handle surface over the logical ledger, so the
+    engine's scheduling path is KV-mode-agnostic.  Dense caches are
+    per-slot rings — nothing is shared, so there is no fork/COW here."""
+
+    __slots__ = ("_pool", "_key", "released")
+
+    def __init__(self, pool: "KVBlockPool", key: int) -> None:
+        self._pool = pool
+        self._key = key
+        self.released = False
+
+    def extend(self, tokens: int) -> bool:
+        if self.released:
+            raise ValueError("extend on released lease")
+        return self._pool.ensure(self._key, tokens)
+
+    def release(self) -> None:
+        if self.released:
+            return
+        self.released = True
+        self._pool.free(self._key)
+
+
 class KVBlockPool:
     def __init__(self, cfg: ArchConfig, *, block_tokens: int = 64,
                  max_blocks: int = 4096,
@@ -58,6 +84,18 @@ class KVBlockPool:
         self._seqs: dict[int, _Seq] = {}
         self.used_blocks = 0
         self.alloc_failures = 0
+        self._next_lease = 0
+
+    def lease(self, tokens: int, shared=None) -> DenseKVLease | None:
+        """Handle-API twin of ``PagedKVAllocator.lease`` (``shared`` is
+        accepted for signature parity and must be empty — dense caches
+        cannot share).  Returns ``None`` if the budget blocks it."""
+        assert not shared, "dense KV has no shared blocks"
+        key = -1 - self._next_lease   # negative: never collides with the
+        self._next_lease += 1         # seq_id-keyed legacy surface
+        if not self.ensure(key, tokens):
+            return None
+        return DenseKVLease(self, key)
 
     # budget is the SmartConf-actuated threshold (deputy = used_blocks)
     def set_budget(self, max_blocks: int) -> None:

@@ -1,0 +1,103 @@
+"""Typed engine configuration: ServeOptions + SLOSpec.
+
+``ServeEngine`` accumulated a sprawl of keyword knobs (KV mode, prefill
+mode, budgets, SLO/telemetry/chaos hooks) plus two environment toggles
+(``REPRO_PREFILL_MODE``, ``REPRO_TELEMETRY``) that were read at scattered
+points.  :class:`ServeOptions` is the one typed bag for all of it, and
+:meth:`ServeOptions.resolve` is the SINGLE env-resolution point — the
+engine, the launcher (``launch/serve.py``) and the bench runner
+(``benchmarks/run.py``) all thread the same object.  The engine still
+accepts the legacy keyword form (``ServeEngine(cfg, params, max_batch=8,
+...)``) by building a ``ServeOptions`` internally, so existing call sites
+keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:  # runtime-free: avoid importing telemetry at module load
+    from repro.core.telemetry import Telemetry
+
+__all__ = ["SLOSpec", "ServeOptions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Serving-level objectives the engine is *measured* against.
+
+    ``ttft_s`` is the per-request TTFT bound: a finished request only counts
+    toward goodput if its own TTFT met it, and the fleet goal the
+    ``serve.admit_tier_max`` brownout controller drives is TTFT-p99 <=
+    ``ttft_s``.  ``decode_s`` (optional) is the decode-latency p99 goal the
+    ``serve.prefill_chunk_tokens`` controller targets.  ``window`` sizes the
+    SLO latency sensors: small enough that the controllers see the current
+    regime, not a stale mix across a load shift."""
+
+    ttft_s: float
+    decode_s: float | None = None
+    window: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Everything configurable about a ``ServeEngine``, in one typed place.
+
+    Fields mirror the legacy keyword surface one-for-one; the additions are
+    the prefix-cache knobs (``prefix_cache`` / ``kv_cache_share`` /
+    ``prefix_hit_rate_goal``), the sliding-window eviction gate
+    (``window_evict``), and the hook fields (``sensor_tap``,
+    ``telemetry``).  ``resolve()`` applies the environment exactly once;
+    the two trailing ``*_env*`` fields are its outputs, not caller
+    inputs."""
+
+    max_batch: int = 4
+    cache_len: int = 256
+    hbm_budget_bytes: int | None = None
+    block_tokens: int = 16
+    enable_smartconf: bool = True
+    latency_goal_s: float | None = None
+    prefill_mode: str = "auto"
+    kv_mode: str = "auto"
+    slo: SLOSpec | None = None
+    num_tiers: int = 3
+    admit_tier_max: int | None = None
+    # --- prefix cache (radix tree over refcounted paged blocks) ---
+    prefix_cache: bool = False          # opt-in; requires paged KV
+    kv_cache_share: float = 0.5         # cache's share of the block budget
+    prefix_hit_rate_goal: float = 0.3   # sc_cache goal (direction="lower")
+    # --- block-level sliding-window eviction (all-window archs) ---
+    window_evict: bool = True
+    # --- hooks ---
+    sensor_tap: Callable[[str, float], float] | None = None
+    telemetry: "Telemetry | None" = None
+    # --- resolve() outputs (env state, recorded for the engine) ---
+    prefill_env_forced: bool = False
+    telemetry_env: bool = False
+
+    def resolve(self, env=os.environ) -> "ServeOptions":
+        """The single environment-resolution point.
+
+        ``REPRO_PREFILL_MODE`` re-routes what ``prefill_mode='auto'``
+        resolves to (the CI matrix leg) without touching explicit mode
+        requests; ``prefill_env_forced`` records that the choice came from
+        the environment, so the engine falls back loudly instead of
+        raising on archs that cannot serve it.  ``one_shot`` is accepted
+        as an alias for ``legacy`` in both the field and the env var.
+        ``REPRO_TELEMETRY`` (any value but empty/``0``) force-enables
+        telemetry when no hub was passed."""
+        pm = self.prefill_mode
+        if pm == "one_shot":
+            pm = "legacy"
+        forced = False
+        if pm == "auto":
+            e = env.get("REPRO_PREFILL_MODE", "").strip() or "auto"
+            e = "legacy" if e == "one_shot" else e
+            if e != "auto":
+                pm, forced = e, True
+        tel_env = env.get("REPRO_TELEMETRY", "").strip() not in ("", "0")
+        return dataclasses.replace(self, prefill_mode=pm,
+                                   prefill_env_forced=forced,
+                                   telemetry_env=tel_env)

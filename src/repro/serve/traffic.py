@@ -100,6 +100,15 @@ class TraceConfig:
     new_hi: int = 16
     new_alpha: float = 1.6
     tiers: tuple[TierSpec, ...] = DEFAULT_TIERS
+    # shared-prefix tenancy (system prompts / few-shot preambles): a
+    # ``prefix_share`` fraction of arrivals is assigned to one of
+    # ``prefix_groups`` groups; every request in a group opens with the
+    # same ``prefix_len`` tokens (materialised deterministically per
+    # (seed, group) in :func:`as_requests`) — the workload the engine's
+    # radix prefix cache exists for.  0 groups (default) disables it.
+    prefix_groups: int = 0
+    prefix_len: int = 0
+    prefix_share: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +121,10 @@ class TraceEvent:
     deadline_s: float | None
     prompt_len: int
     max_new_tokens: int
+    # shared-prefix group this arrival belongs to (-1 = none); its prompt's
+    # first ``prefix_len`` tokens are the group's common preamble
+    prefix_group: int = -1
+    prefix_len: int = 0
 
 
 def _rate_at(cfg: TraceConfig, t: float) -> float:
@@ -172,13 +185,23 @@ def synthesize_trace(cfg: TraceConfig) -> list[TraceEvent]:
     plens = _bounded_pareto(rng, cfg.prompt_lo, cfg.prompt_hi,
                             cfg.prompt_alpha, n)
     nlens = _bounded_pareto(rng, cfg.new_lo, cfg.new_hi, cfg.new_alpha, n)
+    groups = np.full(n, -1, np.int64)
+    if cfg.prefix_groups > 0 and cfg.prefix_len > 0 and n:
+        mask = rng.uniform(size=n) < cfg.prefix_share
+        groups[mask] = rng.choice(cfg.prefix_groups, size=int(mask.sum()))
+        # a grouped prompt must extend past its preamble by at least one
+        # token (the engine always prefills >= 1 token to sample from)
+        plens = np.where(groups >= 0,
+                         np.maximum(plens, cfg.prefix_len + 1), plens)
 
     events = []
     for i, ti in enumerate(times):
         spec = cfg.tiers[int(tier_idx[i])]
+        grp = int(groups[i])
         events.append(TraceEvent(
             t=ti, req_id=i, tier=spec.tier, deadline_s=spec.deadline_s,
-            prompt_len=int(plens[i]), max_new_tokens=int(nlens[i])))
+            prompt_len=int(plens[i]), max_new_tokens=int(nlens[i]),
+            prefix_group=grp, prefix_len=cfg.prefix_len if grp >= 0 else 0))
     return events
 
 
@@ -197,11 +220,26 @@ def as_requests(events: Sequence[TraceEvent], *, vocab: int,
                 ) -> list[tuple[float, Request]]:
     """Materialise trace events into (arrival_time, Request) pairs with
     random token ids.  Token 0 (EOS in the toy tokenizer) is excluded so
-    generation length is governed by ``max_new_tokens``, not luck."""
+    generation length is governed by ``max_new_tokens``, not luck.
+    Shared-prefix events (``prefix_group >= 0``) open with their group's
+    preamble, generated once per (seed, group) — every member of a group
+    carries bit-identical leading tokens across the whole trace."""
     rng = np.random.default_rng(seed)
+    prefixes: dict[int, np.ndarray] = {}
     out = []
     for ev in events:
-        toks = rng.integers(1, vocab, size=ev.prompt_len, dtype=np.int32)
+        if ev.prefix_group >= 0 and 0 < ev.prefix_len < ev.prompt_len:
+            pre = prefixes.get(ev.prefix_group)
+            if pre is None:
+                grng = np.random.default_rng((seed, ev.prefix_group))
+                pre = grng.integers(1, vocab, size=ev.prefix_len,
+                                    dtype=np.int32)
+                prefixes[ev.prefix_group] = pre
+            tail = rng.integers(1, vocab, size=ev.prompt_len - ev.prefix_len,
+                                dtype=np.int32)
+            toks = np.concatenate([pre, tail])
+        else:
+            toks = rng.integers(1, vocab, size=ev.prompt_len, dtype=np.int32)
         out.append((ev.t, Request(
             req_id=id_base + ev.req_id, prompt=toks,
             max_new_tokens=ev.max_new_tokens, tier=ev.tier,

@@ -33,58 +33,67 @@ def _alloc(cfg, *, capacity=8, bps=4, bt=16, accountant=None, budget=None):
 def test_allocator_block_reuse_after_free(small_model):
     cfg, _ = small_model
     pool = _alloc(cfg)
-    assert pool.ensure(1, 40)                    # 3 blocks
-    ids1 = [b for b in pool.table_row(1) if b >= 0]
+    ls1 = pool.lease(40)                         # 3 blocks
+    assert ls1 is not None
+    ids1 = [b for b in ls1.table_row() if b >= 0]
     assert len(ids1) == 3 and pool.used_blocks == 3
-    pool.free(1)
+    ls1.release()
     assert pool.used_blocks == 0 and pool.free_blocks == 8
-    assert pool.ensure(2, 40)
-    ids2 = [b for b in pool.table_row(2) if b >= 0]
+    ls2 = pool.lease(40)
+    ids2 = [b for b in ls2.table_row() if b >= 0]
     assert ids2 == ids1                          # LIFO: freed ids come back
 
-    pool.free(99)                                # unknown seq: no-op
-    pool.free(2)
-    pool.free(2)                                 # double free: no-op
+    ls2.release()
+    ls2.release()                                # double release: no-op
     assert pool.used_blocks == 0 and pool.live_seqs == 0
 
 
 def test_allocator_copy_free_admission(small_model):
-    """Admitting a new sequence must not move any existing sequence's
-    blocks — tables are append-only until free/compact."""
+    """Admitting a new sequence must not move any existing lease's
+    blocks — tables are append-only until release/compact."""
     cfg, _ = small_model
     pool = _alloc(cfg)
-    assert pool.ensure(1, 30)
-    before = pool.table_row(1).copy()
-    assert pool.ensure(2, 50)
-    assert pool.ensure(1, 60)                    # grow seq 1 itself
-    after = pool.table_row(1)
+    ls1 = pool.lease(30)
+    before = ls1.table_row().copy()
+    ls2 = pool.lease(50)
+    assert ls2 is not None
+    assert ls1.extend(60)                        # grow lease 1 itself
+    after = ls1.table_row()
     np.testing.assert_array_equal(before[before >= 0],
                                   after[:len(before[before >= 0])])
-    # distinct sequences never share physical blocks
-    all_ids = [b for s in (1, 2) for b in pool.table_row(s) if b >= 0]
+    # distinct (unshared) leases never share physical blocks
+    all_ids = [b for ls in (ls1, ls2) for b in ls.table_row() if b >= 0]
     assert len(all_ids) == len(set(all_ids))
 
 
 def test_allocator_failure_keeps_accountant_consistent(small_model):
-    """A failed ensure must change neither tables nor the HBM ledger; the
-    ledger always equals capacity * block_bytes (physical store truth)."""
+    """A failed lease/extend must change neither tables nor the HBM
+    ledger; the ledger always equals capacity * block_bytes (physical
+    store truth)."""
     cfg, _ = small_model
     acc = HBMAccountant()
     pool = _alloc(cfg, capacity=4, bps=4, accountant=acc)
     def store_bytes():
         return acc.breakdown().get("kv_cache", 0)
     assert store_bytes() == 4 * pool.block_bytes
-    assert pool.ensure(1, 48)                    # 3 of 4 blocks
+    ls1 = pool.lease(48)                         # 3 of 4 blocks
+    assert ls1 is not None
     assert store_bytes() == 4 * pool.block_bytes
     used0, frag0 = pool.used_blocks, pool.frag_tokens
-    assert not pool.ensure(2, 32)                # free list exhausted
+    assert pool.lease(32) is None                # free list exhausted
     assert pool.alloc_failures == 1
     assert pool.used_blocks == used0 and pool.frag_tokens == frag0
     assert store_bytes() == 4 * pool.block_bytes  # ledger untouched
     # budget-blocked failure, same invariants
     pool.set_budget(3)
-    assert not pool.ensure(3, 16)
+    assert pool.lease(16) is None
     assert pool.alloc_failures == 2
+    assert store_bytes() == 4 * pool.block_bytes
+    # a failed extend is atomic too: the lease keeps its original blocks
+    ids = list(ls1.blocks)
+    assert not ls1.extend(64)                    # +1 block > budget 3
+    assert pool.alloc_failures == 3
+    assert list(ls1.blocks) == ids
     assert store_bytes() == 4 * pool.block_bytes
 
 
@@ -92,18 +101,18 @@ def test_allocator_budget_shrink_and_compact(small_model):
     cfg, _ = small_model
     acc = HBMAccountant()
     pool = _alloc(cfg, capacity=8, bps=4, accountant=acc)
-    assert pool.ensure(1, 40)                    # 3 blocks
-    assert pool.ensure(2, 20)                    # 2 blocks
+    ls1 = pool.lease(40)                         # 3 blocks
+    ls2 = pool.lease(20)                         # 2 blocks
     pool.set_budget(3)
     assert pool.over_budget                      # 5 used > 3 budget
-    pool.free(2)
+    ls2.release()
     assert not pool.over_budget
-    old_ids = [b for b in pool.table_row(1) if b >= 0]
+    old_ids = [b for b in ls1.table_row() if b >= 0]
     keep = pool.compact(4)
     assert pool.capacity == 4
     assert acc.breakdown()["kv_cache"] == 4 * pool.block_bytes  # HBM freed
     # remap correctness: new table slot j must point at old physical id
-    new_ids = [b for b in pool.table_row(1) if b >= 0]
+    new_ids = [b for b in ls1.table_row() if b >= 0]
     assert [keep[j] for j in new_ids] == old_ids
     assert pool.free_blocks == 4 - pool.used_blocks
     grown = pool.grow(8)
@@ -114,12 +123,43 @@ def test_allocator_budget_shrink_and_compact(small_model):
 def test_allocator_fragmentation_sensor(small_model):
     cfg, _ = small_model
     pool = _alloc(cfg, bt=16)
-    assert pool.ensure(1, 20)                    # 2 blocks = 32 tokens
+    ls = pool.lease(20)                          # 2 blocks = 32 tokens
     assert pool.frag_tokens == 12
-    assert pool.ensure(1, 30)                    # same blocks, less waste
+    assert ls.extend(30)                         # same blocks, less waste
     assert pool.frag_tokens == 2
-    pool.free(1)
+    ls.release()
     assert pool.frag_tokens == 0
+
+
+def test_allocator_legacy_shim_warns_and_matches_lease(small_model):
+    """The deprecated seq_id-keyed surface (ensure/free/table_row) must
+    still work — it is a thin shim over leases — and every call must warn
+    DeprecationWarning.  Accounting parity: a shim-held sequence and a
+    lease are indistinguishable to the pool's sensors."""
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    with pytest.warns(DeprecationWarning, match="lease"):
+        assert pool.ensure(1, 40)                # 3 blocks
+    with pytest.warns(DeprecationWarning):
+        shim_ids = [b for b in pool.table_row(1) if b >= 0]
+    ls = pool.lease(40)
+    lease_ids = [b for b in ls.table_row() if b >= 0]
+    assert len(shim_ids) == len(lease_ids) == 3
+    assert not set(shim_ids) & set(lease_ids)    # disjoint physical blocks
+    assert pool.used_blocks == 6 and pool.live_seqs == 2
+    with pytest.warns(DeprecationWarning):
+        assert pool.ensure(1, 50)                # shim extend in place
+    with pytest.warns(DeprecationWarning):
+        assert [b for b in pool.table_row(1)
+                if b >= 0][:3] == shim_ids       # append-only growth
+    with pytest.warns(DeprecationWarning):
+        pool.free(99)                            # unknown seq: no-op
+    with pytest.warns(DeprecationWarning):
+        pool.free(1)
+    with pytest.warns(DeprecationWarning):
+        pool.free(1)                             # double free: no-op
+    ls.release()
+    assert pool.used_blocks == 0 and pool.live_seqs == 0
 
 
 def test_dense_pool_pressure_sensors(small_model):
@@ -269,7 +309,10 @@ def test_bench_serving_smoke():
             "serving_arch_rwkv6_packed",
             "serving_arch_rwkv6_compile_reduction",
             "serving_arch_deepseek_packed",
-            "serving_arch_deepseek_compile_reduction"} <= names
+            "serving_arch_deepseek_compile_reduction",
+            # radix prefix cache: warm run token-identical to cold with
+            # real hits, COW copies, and reclaimed prefill
+            "serving_prefix_cache"} <= names
     cut = {r.split(",")[0]: r for r in rows}
     paged_freed = int(cut["serving_kv_budget_cut_paged"]
                       .split("freed=")[1].split()[0])
@@ -277,3 +320,8 @@ def test_bench_serving_smoke():
                       .split("freed=")[1].split()[0])
     assert paged_freed > 0, "paged budget cut must free physical hbm"
     assert dense_freed == 0, "dense budget cut only moves the ledger"
+    pc = cut["serving_prefix_cache"]
+    assert "identical=True" in pc
+    assert float(pc.split("hit_rate=")[1].split()[0]) > 0
+    assert int(pc.split("reclaimed_tokens=")[1].split()[0]) > 0
+    assert float(pc.split("prefill_reduction=")[1].split()[0]) >= 0.30

@@ -1,0 +1,295 @@
+"""Radix prefix cache over refcounted copy-on-write paged KV: lease
+refcount/COW invariants under adversarial interleavings (out-of-order
+release, preemption, mid-run budget cuts), engine token-identity between
+cache-hit and cold runs, the serve.kv_cache_share control loop's audit
+trail, and block-level sliding-window eviction on all-window archs."""
+
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.sensors import HBMAccountant
+from repro.models import zoo
+from repro.serve import (PagedKVAllocator, PrefixCache, Request, ServeEngine,
+                         ServeOptions, TICK_STATS_KEYS)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _alloc(cfg, *, capacity=8, bps=4, bt=16, accountant=None, budget=None):
+    return PagedKVAllocator(cfg, block_tokens=bt, max_blocks_per_seq=bps,
+                            capacity_blocks=capacity, budget_blocks=budget,
+                            accountant=accountant)
+
+
+# ------------------------------------------------------ refcounts and COW
+def test_fork_shares_then_cow_rehomes(small_model):
+    """A fork consumes zero blocks; the first write through ``writable``
+    re-homes exactly the shared blocks in the write span, leaving blocks
+    outside the span shared."""
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    ls = pool.lease(48)                          # 3 blocks
+    child = ls.fork()
+    assert pool.used_blocks == 3                 # shared blocks count once
+    assert [ls.refcount(i) for i in range(3)] == [2, 2, 2]
+    pairs = child.writable(16, 40)               # spans blocks 1 and 2
+    assert pairs is not None and len(pairs) == 2
+    assert pool.used_blocks == 5
+    assert child.blocks[0] == ls.blocks[0]       # block 0 still shared
+    assert child.blocks[1] != ls.blocks[1]
+    assert child.blocks[2] != ls.blocks[2]
+    assert {p[0] for p in pairs} == {ls.blocks[1], ls.blocks[2]}
+    assert child.writable(16, 40) == []          # now private: no-op
+    ls.release()                                 # donor first (out of order)
+    assert pool.used_blocks == 3                 # child keeps its 3 alive
+    child.release()
+    assert pool.used_blocks == 0 and pool.free_blocks == 8
+
+
+def test_shared_adoption_survives_donor_release(small_model):
+    """The prefix-cache sharing path: a lease adopting live blocks
+    (``shared=``) keeps them alive after the donor releases — and a
+    release never double-frees a still-referenced block."""
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    donor = pool.lease(32)                       # 2 blocks
+    borrower = pool.lease(64, shared=list(donor.blocks))
+    assert pool.used_blocks == 4                 # 2 shared + 2 fresh
+    donor.release()                              # out-of-order release
+    assert pool.used_blocks == 4
+    assert borrower.writable(0, 64) == []        # sole holder now: no COW
+    borrower.release()
+    borrower.release()                           # idempotent
+    assert pool.used_blocks == 0 and pool.free_blocks == 8
+
+
+def test_cow_failure_is_atomic(small_model):
+    """``writable`` that cannot source its copies changes nothing: tables,
+    refcounts, and the free list stay put (counted as an alloc failure)."""
+    cfg, _ = small_model
+    pool = _alloc(cfg, capacity=4)
+    ls = pool.lease(64)                          # all 4 blocks
+    child = ls.fork()
+    before = list(child.blocks)
+    assert child.writable(0, 64) is None         # free list empty
+    assert pool.alloc_failures == 1
+    assert list(child.blocks) == before
+    assert [ls.refcount(i) for i in range(4)] == [2, 2, 2, 2]
+    ls.release()
+    child.release()
+    assert pool.free_blocks == 4
+
+
+def test_allocator_property_sweep(small_model):
+    """Randomized lease/extend/fork/writable/trim/release interleaving with
+    mid-run budget cuts.  After EVERY op the pool's refcounts, free list,
+    occupancy, and HBM ledger must agree with a mirror recomputed from the
+    live lease tables alone — no leaks, no double-frees, no drift."""
+    cfg, _ = small_model
+    acc = HBMAccountant()
+    pool = _alloc(cfg, capacity=16, bps=4, accountant=acc)
+    rng = np.random.default_rng(7)
+    live: list = []
+
+    def check():
+        mirror = collections.Counter(
+            b for ls in live for b in ls.blocks if b >= 0)
+        for b in range(pool.capacity):
+            assert pool._refs[b] == mirror.get(b, 0)
+        assert pool.used_blocks == len(mirror)
+        assert sorted(pool._free) == sorted(
+            set(range(pool.capacity)) - set(mirror))
+        assert acc.breakdown()["kv_cache"] == \
+            pool.capacity * pool.block_bytes
+
+    for step in range(300):
+        op = int(rng.integers(0, 6))
+        if op == 0:
+            ls = pool.lease(int(rng.integers(1, 65)))
+            if ls is not None:
+                live.append(ls)
+        elif op == 1 and live:
+            ls = live[int(rng.integers(len(live)))]
+            ls.extend(ls.tokens + int(rng.integers(1, 33)))
+        elif op == 2 and live:
+            live.append(live[int(rng.integers(len(live)))].fork())
+        elif op == 3 and live:
+            ls = live[int(rng.integers(len(live)))]
+            lo = int(rng.integers(0, max(1, ls.tokens)))
+            ls.writable(lo, min(ls.tokens, lo + int(rng.integers(1, 33))))
+        elif op == 4 and live:
+            ls = live[int(rng.integers(len(live)))]
+            ls.trim_front(int(rng.integers(0, len(ls.blocks) + 1)))
+        elif op == 5 and live:
+            # out-of-order release: any live lease, not LIFO
+            live.pop(int(rng.integers(len(live)))).release()
+        if step % 3 == 0:                        # mid-run budget churn
+            pool.set_budget(int(rng.integers(4, 17)))
+        check()
+    for ls in live:
+        ls.release()
+        ls.release()                             # double release: no-op
+    live.clear()
+    check()
+    assert pool.used_blocks == 0 and pool.free_blocks == pool.capacity
+
+
+def test_cache_survives_borrower_release_and_compact(small_model):
+    """COW-safe preemption at the tree level: a borrower releasing (as a
+    preemption does) must not free blocks the cache still holds; a store
+    compaction renumbers tree-held ids through ``remap_hook``."""
+    cfg, _ = small_model
+    pool = _alloc(cfg)
+    cache = PrefixCache(pool)
+    pool.remap_hook = cache.remap
+    prompt = np.arange(40, dtype=np.int32)
+    donor = pool.lease(40)                       # 3 blocks
+    assert cache.insert(prompt, list(donor.blocks), 1) == 2  # 32-tok prefix
+    donor.release()
+    assert pool.used_blocks == 2 and cache.blocks_held == 2
+    match, blocks = cache.lookup(prompt, 2)
+    assert match == 32 and len(blocks) == 2
+    borrower = pool.lease(40, shared=blocks)
+    assert pool.used_blocks == 3                 # shared pair counted once
+    borrower.release()                           # "preempted" mid-borrow
+    assert pool.used_blocks == 2 and cache.blocks_held == 2
+    keep = pool.compact(2)
+    m2, blocks2 = cache.lookup(prompt, 3)
+    assert m2 == 32
+    assert [int(keep[b]) for b in blocks2] == blocks  # followed renumbering
+    assert cache.clear() == 2
+    assert pool.used_blocks == 0
+
+
+# ----------------------------------------------------------------- engine
+# every arch the paged KV path serves: full/swa/local/global attention
+# incl. MoE FFNs (only attention K/V is paged)
+PAGED_ARCHS = ("yi-6b", "h2o-danube-3-4b", "starcoder2-15b", "gemma3-4b",
+               "deepseek-moe-16b", "llama4-maverick-400b-a17b")
+_MODELS: dict = {}
+
+
+def _paged_model(arch):
+    if arch not in _MODELS:
+        cfg = reduced(get_config(arch))
+        params, _ = zoo.init(cfg, jax.random.key(0))
+        _MODELS[arch] = (cfg, params)
+    return _MODELS[arch]
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_engine_cache_hit_token_identical_to_cold(arch, rng):
+    """Acceptance: a request admitted over a cached (mid-block!) prefix
+    generates exactly the tokens the cold engine generates, with real
+    reclaimed-prefill and COW activity on the warm side — for every arch
+    the paged path serves."""
+    cfg, params = _paged_model(arch)
+    prefix = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    prompts = [np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, 24).astype(np.int32)])
+        for _ in range(2)]
+    outs = {}
+    for cache_on in (False, True):
+        eng = ServeEngine(cfg, params, options=ServeOptions(
+            max_batch=2, cache_len=96, enable_smartconf=False,
+            kv_mode="paged", prefix_cache=cache_on))
+        for i, p in enumerate(prompts):         # serial: insert, then hit
+            adm = eng.submit(Request(i, p, 6))
+            assert adm and adm.footprint_blocks > 0
+            if cache_on and i == 1:
+                assert adm.prefix_hit_tokens == 40   # mid-block match
+            ticks = 0
+            while len(eng.finished) < i + 1 and ticks < 200:
+                stats = eng.tick()
+                ticks += 1
+            assert len(eng.finished) == i + 1
+            assert tuple(stats) == TICK_STATS_KEYS   # frozen sensor schema
+        outs[cache_on] = {r.req_id: r.generated for r in eng.finished}
+        if cache_on:
+            assert eng.prefix_hit_tokens_total == 40
+            assert eng.cow_copied_blocks >= 1        # boundary block copied
+            assert eng._prefix_cache.hit_rate > 0
+        eng.close()
+    assert outs[True] == outs[False]
+
+
+def test_kv_cache_share_controller_leaves_audit_trail(small_model, rng):
+    """Acceptance: serve.kv_cache_share is actuated by a guarded SmartConf
+    whose decisions land in the telemetry audit log with the windowed
+    prefix_hit_rate sensor attached."""
+    from repro.core.smartconf import ConfRegistry
+    from repro.core.telemetry import Telemetry
+    cfg, params = small_model
+    tel = Telemetry(enabled=True)
+    eng = ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=2, cache_len=96, enable_smartconf=True,
+        kv_mode="paged", prefix_cache=True, telemetry=tel),
+        registry=ConfRegistry())
+    prefix = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+
+    def submit(i):
+        tail = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        assert eng.submit(Request(i, np.concatenate([prefix, tail]), 4))
+
+    submit(0)                                    # cold insert
+    ticks = 0
+    while len(eng.finished) < 1 and ticks < 200:
+        eng.tick()
+        ticks += 1
+    for i in (1, 2, 3):                          # warm hits
+        submit(i)
+    while len(eng.finished) < 4 and ticks < 600:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 4
+    assert eng.prefix_hit_tokens_total > 0
+    recs = tel.audit.query(conf="serve.kv_cache_share")
+    assert recs, "cache-share controller left no audit Decisions"
+    assert all(r.metric == "prefix_hit_rate" for r in recs)
+    assert any(r.sensor > 0 for r in recs)       # real hit-rate readings
+    assert 0.05 <= eng.kv_cache_share <= 0.9     # inside actuator bounds
+    eng.close()
+
+
+def test_window_eviction_all_swa_token_identical_and_frees(rng):
+    """Block-level sliding-window eviction (the PR-2 follow-on): on an
+    all-swa arch the paged engine trims blocks wholly below every live
+    window mid-run — front table entries go to -1 and the pool's occupancy
+    stays below the no-trim watermark — while remaining token-identical to
+    the dense engine."""
+    cfg = reduced(get_config("h2o-danube-3-4b"))  # every layer swa
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (12, 25)]
+    outs, trimmed = {}, 0
+    for mode in ("paged", "dense"):
+        eng = ServeEngine(cfg, params, options=ServeOptions(
+            max_batch=2, cache_len=96, enable_smartconf=False,
+            kv_mode=mode))
+        if mode == "paged":
+            assert eng._window_evict, "all-swa paged engine must trim"
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 60))
+        ticks = 0
+        while len(eng.finished) < len(prompts) and ticks < 400:
+            eng.tick()
+            if mode == "paged":
+                for req in eng.running.values():
+                    if req.lease is not None:
+                        trimmed = max(trimmed, sum(
+                            1 for b in req.lease.blocks if b < 0))
+            ticks += 1
+        assert len(eng.finished) == len(prompts), mode
+        outs[mode] = {r.req_id: r.generated for r in eng.finished}
+        eng.close()
+    assert trimmed > 0, "window eviction never freed a leading block"
+    assert outs["paged"] == outs["dense"]

@@ -37,10 +37,12 @@ def test_submit_rejects_invalid_requests_typed(small_model, rng):
     cfg, params = small_model
     eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
                       enable_smartconf=False)
-    assert eng.submit(_req(rng, cfg, 0, plen=0)) is RejectReason.EMPTY_PROMPT
-    assert eng.submit(_req(rng, cfg, 1, plen=80, new=8)) \
-        is RejectReason.PROMPT_TOO_LONG
-    assert eng.submit(_req(rng, cfg, 2, plen=16, new=6)) is None
+    adm = eng.submit(_req(rng, cfg, 0, plen=0))
+    assert not adm and adm.reason is RejectReason.EMPTY_PROMPT
+    adm = eng.submit(_req(rng, cfg, 1, plen=80, new=8))
+    assert not adm and adm.reason is RejectReason.PROMPT_TOO_LONG
+    adm = eng.submit(_req(rng, cfg, 2, plen=16, new=6))
+    assert adm and adm.reason is None and adm.footprint_blocks > 0
     assert eng.rejected == 2
     assert eng.reject_counts["empty_prompt"] == 1
     assert eng.reject_counts["prompt_too_long"] == 1
@@ -57,8 +59,10 @@ def test_submit_rejects_footprint_beyond_any_budget(small_model, rng):
                       block_tokens=16, enable_smartconf=False)
     eng.set_kv_budget(1)                 # 16 tokens of KV, total
     big = _req(rng, cfg, 0, plen=40, new=8)   # needs 3 blocks
-    assert eng.submit(big) is RejectReason.KV_FOOTPRINT
-    assert eng.submit(_req(rng, cfg, 1, plen=8, new=4)) is None
+    adm = eng.submit(big)
+    assert not adm and adm.reason is RejectReason.KV_FOOTPRINT
+    assert adm.footprint_blocks == 3
+    assert eng.submit(_req(rng, cfg, 1, plen=8, new=4))
     eng.close()
 
 
@@ -170,7 +174,8 @@ def test_preemption_drains_requeues_and_resumes(small_model, rng):
     # admission order survives the drain
     seq = [r.req_id for r in eng.drained_requests()]
     assert seq == sorted(seq)
-    assert eng.submit(_req(rng, cfg, 99)) is RejectReason.DRAINING
+    adm = eng.submit(_req(rng, cfg, 99))
+    assert not adm and adm.reason is RejectReason.DRAINING
     eng.tick()                            # idles while the signal is up
     eng.preemption.reset()
     for _ in range(60):

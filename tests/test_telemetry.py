@@ -259,8 +259,8 @@ def test_engine_emits_spans_counters_and_readings(small_model, rng):
                       block_tokens=16, enable_smartconf=True,
                       hbm_budget_bytes=weights + 2_000_000,
                       slo=SLOSpec(ttft_s=5.0, window=8), telemetry=tel)
-    assert eng.submit(_req(rng, cfg, 0)) is None
-    assert eng.submit(_req(rng, cfg, 1, plen=0)) is not None   # typed reject
+    assert eng.submit(_req(rng, cfg, 0))
+    assert not eng.submit(_req(rng, cfg, 1, plen=0))           # typed reject
     ticks = 0
     while len(eng.finished) < 1 and ticks < 50:
         eng.tick()
