@@ -123,12 +123,148 @@ def _run_policy(cfg, params, trace, horizon_s: float, *,
     out["chaos_schedule"] = list(monkey.events)
     out["sensor_faults"] = sum(
         sc.sensor_faults for sc in
-        (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit, eng.sc_cache)
+        (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit, eng.sc_cache,
+         eng.sc_spec)
         if sc is not None)
     if tel is not None:
         out["telemetry_paths"] = tel.write(telemetry_dir)
     eng.close()
     return out
+
+
+# ---- speculation-depth sweep: adaptive vs static k on a shifting trace ---
+# The serve.spec_depth analogue of the admission story above.  Crafted
+# markov weights make greedy decode a token cycle; the first half of the
+# trace sends prompts that lap the cycle FORWARD (the n-gram drafter's
+# proposals all land -> deep drafts pay), the second half laps it in
+# REVERSE (the drafter stays confident — every emitted token appears in
+# the prompt — but its continuations are all wrong, so every verify lane
+# is wasted).  Under a virtual-time cost model that charges per verify
+# lane, every static depth loses one half: k=0 forgoes the multi-token
+# ticks the forward phase offers, deep k burns lanes all through the
+# reverse phase.  The accept-rate controller rides the shift — deepen
+# while the windowed rate holds above the setpoint, shrink to the floor
+# of 1 when it collapses.  Chaos stays ON (same schedule), so the sweep
+# also pins speculation's coexistence with preemption, budget cuts and
+# NaN sensor windows.
+SPEC_CYCLE = 12
+SPEC_RATE_RPS = 28.0
+SPEC_LANE_S = 8e-3
+SPEC_STATIC_DEPTHS = (0, 1, 2, 4, 8)
+
+
+def _spec_workload(cfg, horizon_s: float):
+    """(arrival, Request) pairs whose prompt *content* flips regime at
+    half-horizon; lengths/output sizes/tiers still come from the trace."""
+    import numpy as np
+
+    from repro.serve import TraceConfig, as_requests, synthesize_trace
+
+    trace = synthesize_trace(TraceConfig(
+        process="poisson", rate_rps=SPEC_RATE_RPS, horizon_s=horizon_s,
+        seed=29, prompt_lo=16, prompt_hi=24, prompt_alpha=1.3,
+        # decode-heavy outputs: the draft-depth clamp is max_new-bounded,
+        # so short outputs would collapse every k >= 4 onto the same
+        # effective depth and mute the sweep
+        new_lo=8, new_hi=16, new_alpha=1.6, tiers=_tiers()))
+    cyc = np.arange(1, SPEC_CYCLE + 1, dtype=np.int32)   # token 0 is EOS
+    half = horizon_s / 2.0
+    arrivals = []
+    for t, req in as_requests(trace, vocab=cfg.vocab_size, seed=1):
+        idx = np.arange(len(req.prompt))
+        a = req.req_id % SPEC_CYCLE
+        if t < half:                          # forward laps: drafts land
+            req.prompt = cyc[(a + idx) % SPEC_CYCLE]
+        else:                                 # reverse laps: drafts never do
+            req.prompt = cyc[(a - idx) % SPEC_CYCLE]
+        arrivals.append((t, req))
+    return arrivals
+
+
+def _run_spec_policy(cfg, params, horizon_s: float, *, depth: int,
+                     adaptive: bool) -> dict:
+    from repro.core.smartconf import ConfRegistry
+    from repro.serve import (ChaosMonkey, OpenLoopDriver, SLOSpec,
+                             ServeEngine, ServeOptions, TickCostModel,
+                             VirtualClock)
+
+    vc = VirtualClock()
+    eng = ServeEngine(
+        cfg, params, options=ServeOptions(
+            max_batch=MAX_BATCH, cache_len=CACHE_LEN, block_tokens=16,
+            enable_smartconf=True, prefill_mode="packed",
+            slo=SLOSpec(ttft_s=TTFT_SLO_S, window=24), num_tiers=NUM_TIERS,
+            spec_depth=depth, spec_adaptive=adaptive),
+        registry=ConfRegistry(), clock=vc)
+    monkey = ChaosMonkey(_chaos_spec(horizon_s)).install(eng)
+    drv = OpenLoopDriver(
+        eng, _spec_workload(cfg, horizon_s), clock=vc,
+        cost=TickCostModel(base_s=0.02, prefill_token_s=1e-3,
+                           decode_token_s=8e-3, spec_lane_s=SPEC_LANE_S),
+        chaos=monkey, drain_s=max(t.deadline_s or 0.0
+                                  for t in _tiers()) + 8.0)
+    out = drv.run()
+    out["chaos_events"] = len(monkey.events)
+    out["proposed"] = eng.spec_proposed
+    out["accepted"] = eng.spec_accepted
+    out["final_depth"] = eng.spec_depth
+    out["sensor_faults"] = sum(
+        sc.sensor_faults for sc in
+        (eng.sc_queue, eng.sc_kv, eng.sc_chunk, eng.sc_admit, eng.sc_spec)
+        if sc is not None)
+    eng.close()
+    return out
+
+
+def _spec_rows(cfg, params, horizon_s: float) -> list[str]:
+    from repro.serve.speculation import markov_params
+
+    import jax
+    import numpy as np
+
+    from repro.models import zoo
+
+    cyc = np.arange(1, SPEC_CYCLE + 1)
+    sparams = markov_params(
+        cfg, zoo.init(cfg, jax.random.key(0))[0],
+        {int(cyc[i]): int(cyc[(i + 1) % SPEC_CYCLE])
+         for i in range(SPEC_CYCLE)})
+    res = {"adaptive": _run_spec_policy(cfg, sparams, horizon_s,
+                                        depth=2, adaptive=True)}
+    for k in SPEC_STATIC_DEPTHS:
+        res[f"static_k{k}"] = _run_spec_policy(cfg, sparams, horizon_s,
+                                               depth=k, adaptive=False)
+    rows = []
+    for name, r in res.items():
+        rows.append(fmt_row(
+            f"slo_spec_{name}", 0.0,
+            f"goodput_tps={r['goodput_tps']:.2f} "
+            f"throughput_tps={r['throughput_tps']:.2f} "
+            f"finished={r['finished']} rejected={r['rejected']} "
+            f"accepted={r['accepted']} proposed={r['proposed']} "
+            f"final_depth={r['final_depth']} "
+            f"chaos_events={r['chaos_events']} "
+            f"unhandled={len(r['unhandled'])}"))
+        assert r["unhandled"] == [], \
+            f"slo_spec_{name}: unhandled under chaos: {r['unhandled']}"
+    ad = res["adaptive"]
+    assert ad["final_depth"] == 1, (
+        "the reverse-lap second half should leave the adaptive depth at "
+        f"the floor, got {ad['final_depth']}")
+    for k in SPEC_STATIC_DEPTHS:
+        r = res[f"static_k{k}"]
+        assert ad["goodput_tps"] >= r["goodput_tps"], (
+            f"adaptive spec goodput {ad['goodput_tps']:.2f} tok/s below "
+            f"static k={k} ({r['goodput_tps']:.2f} tok/s)")
+    best_k, best = max(((k, res[f"static_k{k}"])
+                        for k in SPEC_STATIC_DEPTHS),
+                       key=lambda kr: kr[1]["goodput_tps"])
+    rows.append(fmt_row(
+        "slo_spec_adaptive_vs_best_static", 0.0,
+        f"adaptive={ad['goodput_tps']:.2f}tps "
+        f"best_static={best['goodput_tps']:.2f}tps(k={best_k}) "
+        f"margin={ad['goodput_tps'] / max(best['goodput_tps'], 1e-9):.2f}x"))
+    return rows
 
 
 # a chaos fault at tick T must have a controller Decision recorded within
@@ -236,6 +372,9 @@ def run(smoke: bool = False) -> list[str]:
         f"adaptive={res['adaptive']['goodput_tps']:.2f}tps "
         f"best_static={best['goodput_tps']:.2f}tps({best_name}) "
         f"margin={res['adaptive']['goodput_tps'] / max(best['goodput_tps'], 1e-9):.2f}x"))
+
+    # ---- speculation-depth sweep (same chaos schedule, markov regime) ----
+    rows.extend(_spec_rows(cfg, params, horizon_s))
 
     # ---- flight-recorder gates (asserted from the written artifacts) ----
     rows.append(fmt_row("slo_telemetry", 0.0, _assert_telemetry(res)))

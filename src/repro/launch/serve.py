@@ -60,6 +60,21 @@ def main() -> None:
     ap.add_argument("--prefix-len", type=int, default=32,
                     help="with --trace: common preamble length (tokens) "
                          "for each prefix group")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="self-speculative decode draft depth k (0 = off): "
+                         "each running slot's decode segment carries up to "
+                         "k n-gram-drafted tokens verified in the same "
+                         "fused dispatch; with SmartConf on, this is the "
+                         "initial value of the serve.spec_depth knob. "
+                         "Requires packed prefill mode")
+    ap.add_argument("--spec-depth-max", type=int, default=8,
+                    help="ceiling for the serve.spec_depth knob")
+    ap.add_argument("--accept-rate-goal", type=float, default=0.5,
+                    help="sc_spec setpoint: windowed draft accept rate the "
+                         "depth controller holds the engine above")
+    ap.add_argument("--no-spec-adaptive", action="store_true",
+                    help="pin serve.spec_depth at --spec-depth instead of "
+                         "letting SmartConf actuate it")
     ap.add_argument("--full-size", action="store_true")
     # open-loop trace mode (serve/README.md): arrivals at trace rate on a
     # virtual clock, tier gating + SLO accounting + optional fault injection
@@ -106,7 +121,10 @@ def main() -> None:
         max_batch=args.max_batch, cache_len=args.cache_len,
         hbm_budget_bytes=budget, prefill_mode=args.prefill_mode,
         kv_mode=args.kv_mode, prefix_cache=args.prefix_cache,
-        kv_cache_share=args.kv_cache_share, telemetry=tel))
+        kv_cache_share=args.kv_cache_share, telemetry=tel,
+        spec_depth=args.spec_depth, spec_depth_max=args.spec_depth_max,
+        spec_adaptive=not args.no_spec_adaptive,
+        accept_rate_goal=args.accept_rate_goal))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -129,7 +147,10 @@ def main() -> None:
              f"hit rate {eng._prefix_cache.hit_rate:.2f}, "
              f"{eng.prefix_hit_tokens_total} prefill tokens reclaimed, "
              f"{eng.cow_copied_blocks} COW copies"
-             if eng._prefix_cache is not None else ""))
+             if eng._prefix_cache is not None else "")
+          + (f"; spec depth {eng.spec_depth}, "
+             f"{eng.spec_accepted}/{eng.spec_proposed} drafts accepted"
+             if eng.spec_enabled else ""))
     if tel is not None:
         paths = tel.write(args.telemetry_dir)
         print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "
@@ -152,7 +173,10 @@ def _run_trace(cfg, params, budget: int, args) -> None:
         max_batch=args.max_batch, cache_len=args.cache_len,
         hbm_budget_bytes=budget, prefill_mode=args.prefill_mode,
         kv_mode=args.kv_mode, prefix_cache=args.prefix_cache,
-        kv_cache_share=args.kv_cache_share, slo=slo, telemetry=tel),
+        kv_cache_share=args.kv_cache_share, slo=slo, telemetry=tel,
+        spec_depth=args.spec_depth, spec_depth_max=args.spec_depth_max,
+        spec_adaptive=not args.no_spec_adaptive,
+        accept_rate_goal=args.accept_rate_goal),
         clock=vc)
     trace = synthesize_trace(TraceConfig(
         process=args.trace, rate_rps=args.rate_rps,

@@ -68,17 +68,23 @@ def block_init(key, cfg, kind: str) -> tuple[dict, dict]:
 # ---------------------------------------------------------------------------
 
 
-def cache_len_for(cfg, kind: str, seq_len: int) -> int:
+def cache_len_for(cfg, kind: str, seq_len: int, margin: int = 0) -> int:
+    """Ring length for one layer's dense cache.  ``margin`` widens windowed
+    rings past ``cfg.window``: speculative decode writes up to ``k`` draft
+    positions past the pending token before the oldest in-window key is
+    dead, so a ring must hold ``window + k`` entries or a rejected draft
+    would overwrite a key the next tick still attends to."""
     base, _ = split_kind(kind)
     if base in ("swa", "local"):
-        return min(cfg.window, seq_len)
+        return min(cfg.window + margin, seq_len)
     return seq_len
 
 
-def block_cache_init(cfg, kind: str, batch: int, seq_len: int):
+def block_cache_init(cfg, kind: str, batch: int, seq_len: int,
+                     ring_margin: int = 0):
     base, _ = split_kind(kind)
     if base in ATTN_KINDS:
-        n = cache_len_for(cfg, kind, seq_len)
+        n = cache_len_for(cfg, kind, seq_len, margin=ring_margin)
         hd = cfg.resolved_head_dim
         return {
             "k": jnp.zeros((batch, n, cfg.num_kv_heads, hd), cfg.dtype),
@@ -510,6 +516,80 @@ def block_apply_packed(cfg, kind: str, params: dict, x: jax.Array,
         y = layers.mlp(params["mlp"], h2, cfg.mlp)
     x = x + y
     return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# apply: packed stream with speculative (length-k) decode segments
+# ---------------------------------------------------------------------------
+
+
+def block_apply_spec(cfg, kind: str, params: dict, x: jax.Array,
+                     pos: jax.Array, slot_id: jax.Array, start: jax.Array,
+                     seg_len: jax.Array, spec_rows: jax.Array, l_max: int,
+                     cache: dict, block_tables: jax.Array | None = None):
+    """:func:`block_apply_packed` for a stream whose decode segments carry
+    speculative drafts (length ``1 + d`` segments, ``spec_rows`` [B] bool
+    marking them; ``l_max`` static max segment length).
+
+    Attention kinds need nothing new: the segment predicate
+    (same-segment & ``k_pos <= q_pos``) already verifies every draft
+    offset exactly, and rejected-suffix K/V self-heals — stale entries
+    are position-masked (dense) or overwritten before the gather (paged)
+    on the next tick.  Delegates unchanged.
+
+    Recurrent kinds (rwkv6/rglru) mutate state per token, so a rejected
+    draft must be *rolled back*.  Spec rows therefore advance through
+    ``l_max`` sequential single-column chunk calls, snapshotting the state
+    after each offset; non-spec rows take the normal full-chunk path.
+    Returns the cache as a pending pair ``{"spec_stack": [L,B,...],
+    "spec_full": [B,...]}`` — the caller selects snapshot ``accept[b]``
+    per spec row once acceptance is known (``transformer.step_spec``)."""
+    base, _ = split_kind(kind)
+    if base not in ("rwkv6", "rglru"):
+        return block_apply_packed(cfg, kind, params, x, pos, slot_id, start,
+                                  seg_len, cache, block_tables=block_tables)
+
+    p_len = x.shape[1]
+    nslots = start.shape[0]
+    valid = (slot_id >= 0)[None, :]                              # [1,P]
+    row = jnp.where(slot_id >= 0, slot_id, nslots)               # B => drop
+    off = jnp.clip(pos - start[jnp.clip(slot_id, 0, nslots - 1)],
+                   0, p_len - 1)
+    xs = jnp.zeros((nslots, p_len, x.shape[2]), x.dtype)
+    xs = xs.at[row, off].set(x[0], mode="drop")
+    row_valid = (jnp.arange(p_len, dtype=jnp.int32)[None, :]
+                 < seg_len[:, None])
+    row_pos = start[:, None] + jnp.arange(p_len, dtype=jnp.int32)[None, :]
+
+    # non-spec (prefill) rows: one full-chunk call, spec rows masked out so
+    # their state never advances here (and the fresh-at-0 reset still fires
+    # only for genuine prompt starts)
+    y_full, cache_full, aux = block_apply_chunk(
+        cfg, kind, params, xs, row_pos, row_valid & ~spec_rows[:, None],
+        cache)
+
+    # spec rows: offsets advance one column at a time from the pre-tick
+    # state, snapshotting after each offset — pads are neutral in the chunk
+    # kernels, so width-1 sequential calls compose exactly
+    l_eff = min(int(l_max), p_len)
+    st = cache
+    snaps, cols = [], []
+    for j in range(l_eff):
+        col_valid = spec_rows[:, None] & row_valid[:, j:j + 1]
+        yj, st, aux_j = block_apply_chunk(
+            cfg, kind, params, xs[:, j:j + 1], row_pos[:, j:j + 1],
+            col_valid, st)
+        aux = aux + aux_j
+        snaps.append(st)
+        cols.append(yj)
+    y_spec = jnp.concatenate(cols, axis=1)                       # [B,l_eff,d]
+    stack = jax.tree.map(lambda *s: jnp.stack(s), *snaps)        # [L,B,...]
+
+    y_sp = jnp.zeros_like(y_full).at[:, :l_eff].set(y_spec)
+    y = jnp.where(spec_rows[:, None, None], y_sp, y_full)
+    xg = y[jnp.clip(slot_id, 0, nslots - 1), off][None]          # [1,P,d]
+    pending = {"spec_stack": stack, "spec_full": cache_full}
+    return jnp.where(valid[..., None], xg, x), pending, aux
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,12 @@ Public entry points (all pure):
                                         -> (last_logits, caches)  [in-place;
                                         one ragged stream of prefill chunks
                                         + length-1 decode segments]
+    step_spec(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
+              spec_rows, spec_idx, draft_len)
+                                        -> (accept, toks, caches) [packed
+                                        stream whose decode segments carry
+                                        length-(1+d) speculative drafts;
+                                        greedy acceptance computed in-graph]
     decode_step(cfg, params, caches, token, pos) -> (logits, caches)
     init_cache(cfg, batch, cache_len)   -> caches
 """
@@ -345,18 +351,24 @@ def loss_fn(cfg, params, batch, *, remat: str = "dots",
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg, batch: int, cache_len: int):
+def init_cache(cfg, batch: int, cache_len: int, ring_margin: int = 0):
+    """``ring_margin`` widens windowed (swa/local) rings past ``cfg.window``
+    — required when speculative drafts write up to ``k`` rejected positions
+    past the pending token (see :func:`blocks.cache_len_for`)."""
     prefix, pattern, n_groups, rem = _plan(cfg)
     caches = {}
     if prefix:
-        caches["prefix"] = [B.block_cache_init(cfg, k, batch, cache_len)
+        caches["prefix"] = [B.block_cache_init(cfg, k, batch, cache_len,
+                                               ring_margin=ring_margin)
                             for k in prefix]
     if n_groups:
-        group = [B.block_cache_init(cfg, k, batch, cache_len) for k in pattern]
+        group = [B.block_cache_init(cfg, k, batch, cache_len,
+                                    ring_margin=ring_margin) for k in pattern]
         caches["groups"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), group)
     if rem:
-        caches["rem"] = [B.block_cache_init(cfg, k, batch, cache_len)
+        caches["rem"] = [B.block_cache_init(cfg, k, batch, cache_len,
+                                            ring_margin=ring_margin)
                          for k in rem]
     if cfg.encoder_decoder:
         caches["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
@@ -602,6 +614,122 @@ def step_packed(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
 
 # prefill-only packed streams are the decode-segment-free special case
 prefill_packed = step_packed
+
+
+def _is_pending(c) -> bool:
+    return isinstance(c, dict) and "spec_stack" in c
+
+
+def _resolve_pending(c, accept, spec_rows, *, grouped: bool):
+    """Select the post-acceptance recurrent snapshot per spec row.
+
+    ``spec_stack`` leaves are [L,B,...] (or [G,L,B,...] for scanned
+    groups): snapshot ``j`` is the state after consuming offsets ``0..j``
+    of the spec segment, so ``accept[b]`` names exactly the state after
+    the last *emitted-and-consumed* token.  Non-spec rows keep the
+    full-chunk result."""
+    def pick(stack, full):
+        if grouped:
+            l = stack.shape[1]
+            idx = jnp.clip(accept, 0, l - 1).reshape(
+                (1, 1, -1) + (1,) * (stack.ndim - 3))
+            sel = jnp.take_along_axis(stack, idx, axis=1)[:, 0]
+            m = spec_rows.reshape((1, -1) + (1,) * (sel.ndim - 2))
+        else:
+            l = stack.shape[0]
+            idx = jnp.clip(accept, 0, l - 1).reshape(
+                (1, -1) + (1,) * (stack.ndim - 2))
+            sel = jnp.take_along_axis(stack, idx, axis=0)[0]
+            m = spec_rows.reshape((-1,) + (1,) * (sel.ndim - 1))
+        return jnp.where(m, sel.astype(full.dtype), full)
+
+    return jax.tree.map(pick, c["spec_stack"], c["spec_full"])
+
+
+def step_spec(cfg, params, caches, tokens, slot_id, pos, start, seg_len,
+              spec_rows, spec_idx, draft_len, block_tables=None):
+    """One packed stream whose decode segments carry speculative drafts.
+
+    Layout is :func:`step_packed`'s, except a running slot's segment is
+    ``[pending, d1..dd]`` (length ``1 + d``, ``start = pos``): the pending
+    token — the slot's last sampled, not-yet-consumed token — followed by
+    ``d`` drafted continuations.  Extra inputs: spec_rows [B] bool marks
+    draft-carrying rows; spec_idx [B, L] stream index of each segment
+    offset (rows with shorter segments repeat their last index — masked by
+    draft_len); draft_len [B] drafted tokens per row (0 for prefill rows,
+    whose spec_idx[:, 0] names their last packed prompt token).
+
+    Verification is the per-offset argmax over the SAME dispatch:
+    ``m[b, j]`` is the model's next token after consuming offsets
+    ``0..j``.  Greedy acceptance keeps the longest prefix of drafts that
+    match: ``accept[b] = #{j >= 1 : drafts[1..j] all equal m[..j-1]}`` —
+    the emitted tokens ``m[b, 0..accept[b]]`` are exactly what ``accept+1``
+    sequential non-speculative steps would have produced, so speculation
+    is token-identical by construction.  Returns (accept [B] int32,
+    toks [B, L] int32 per-offset argmaxes, caches): the caller emits
+    ``toks[b, :accept[b]+1]`` and re-bases the slot at
+    ``start + accept + 1``.
+
+    Rejected-suffix K/V needs no undo: dense entries at/after the next
+    tick's ``start`` are position-masked as stale, paged entries are
+    overwritten before the gather (write-then-gather) and causally hidden
+    past the new frontier.  Recurrent state IS rolled back — spec rows
+    advance through per-offset snapshots and the ``accept``-selected
+    snapshot is written back here (:func:`blocks.block_apply_spec`)."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: block pattern {cfg.block_pattern} "
+                         "does not support packed prefill")
+    prefix, pattern, n_groups, rem = _plan(cfg)
+    l_max = spec_idx.shape[1]
+    x = params["embed"][tokens]
+
+    for j, kind in enumerate(prefix):
+        x, caches["prefix"][j], _ = B.block_apply_spec(
+            cfg, kind, params["prefix"][j], x, pos, slot_id, start, seg_len,
+            spec_rows, l_max, caches["prefix"][j],
+            block_tables=block_tables)
+
+    if n_groups:
+        def group_body(x, xs):
+            gp, gc = xs
+            new_c = []
+            for j, kind in enumerate(pattern):
+                x, cj, _ = B.block_apply_spec(cfg, kind, gp[j], x, pos,
+                                              slot_id, start, seg_len,
+                                              spec_rows, l_max, gc[j],
+                                              block_tables=block_tables)
+                new_c.append(cj)
+            return x, new_c
+
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], caches["groups"]))
+        caches["groups"] = new_groups
+
+    for j, kind in enumerate(rem):
+        x, caches["rem"][j], _ = B.block_apply_spec(
+            cfg, kind, params["rem"][j], x, pos, slot_id, start, seg_len,
+            spec_rows, l_max, caches["rem"][j], block_tables=block_tables)
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    xs = x[0, spec_idx]                                     # [B, L, d]
+    toks = jnp.argmax(_logits(cfg, params, xs), axis=-1).astype(jnp.int32)
+    drafted = tokens[0, spec_idx]                           # [B, L]
+    offs = jnp.arange(1, l_max, dtype=jnp.int32)[None, :]
+    match = ((drafted[:, 1:] == toks[:, :-1])
+             & (offs <= draft_len[:, None]))
+    accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+
+    # recurrent pending pairs -> the accept-selected canonical state tree
+    for key in ("prefix", "rem"):
+        if key in caches:
+            caches[key] = [
+                _resolve_pending(c, accept, spec_rows, grouped=False)
+                if _is_pending(c) else c for c in caches[key]]
+    if "groups" in caches:
+        caches["groups"] = [
+            _resolve_pending(c, accept, spec_rows, grouped=True)
+            if _is_pending(c) else c for c in caches["groups"]]
+    return accept, toks, caches
 
 
 def decode_step(cfg, params, caches, token, pos, active=None,

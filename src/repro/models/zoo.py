@@ -10,7 +10,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from . import transformer
 
 __all__ = ["init", "loss_fn", "forward", "prefill", "prefill_chunk",
-           "prefill_packed", "step_packed", "supports_chunked_prefill",
+           "prefill_packed", "step_packed", "step_spec",
+           "supports_chunked_prefill",
            "supports_paged_kv", "decode_step", "init_cache",
            "init_paged_cache", "map_paged_caches", "copy_paged_blocks",
            "make_batch", "input_specs"]
@@ -22,6 +23,7 @@ prefill = transformer.prefill
 prefill_chunk = transformer.prefill_chunk
 prefill_packed = transformer.prefill_packed
 step_packed = transformer.step_packed
+step_spec = transformer.step_spec
 supports_chunked_prefill = transformer.supports_chunked_prefill
 supports_paged_kv = transformer.supports_paged_kv
 decode_step = transformer.decode_step

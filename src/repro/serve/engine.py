@@ -126,6 +126,7 @@ from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
 from .options import ServeOptions, SLOSpec
 from .paging import PagedKVAllocator
 from .prefix_cache import PrefixCache
+from .speculation import NGramDrafter
 
 __all__ = ["Admission", "Request", "RejectReason", "SLOSpec", "ServeEngine",
            "ServeOptions", "TICK_STATS_KEYS"]
@@ -150,6 +151,11 @@ TICK_STATS_KEYS: tuple[str, ...] = (
     # appended (prefix cache PR): reclaimed prefill tokens this tick, the
     # radix tree's held blocks, and the live cache share of the budget
     "prefix_hit_tokens", "prefix_cache_blocks", "kv_cache_share",
+    # appended (speculative-decode PR): live draft depth, this tick's
+    # accept rate, draft verify lanes issued (the stream width speculation
+    # added), and decoding slots (the per-tick KV-read unit now that one
+    # slot can emit several tokens per dispatch)
+    "spec_depth", "accept_rate", "spec_lanes", "decode_slots",
 )
 
 # rejections in one tick at or past this count dump the flight recorder:
@@ -320,6 +326,38 @@ class ServeEngine:
             kv_mode == "auto" and self.fused_prefill
             and zoo.supports_paged_kv(cfg))
 
+        # ------------------------------------- self-speculative decode
+        # rides the unified packed stream: each running slot's segment is
+        # [pending token, draft...] and the SAME compiled dispatch that
+        # prefills chunks verifies every draft position.  Engines without
+        # the packed path cannot speculate; an explicit request raises, the
+        # env-forced CI leg silently degrades to k=0.
+        spec_depth = int(opts.spec_depth)
+        if spec_depth > 0 and self.prefill_impl != "packed":
+            if opts.spec_env_forced:
+                spec_depth = 0
+            else:
+                raise ValueError(
+                    f"{cfg.name}: speculative decode rides the packed "
+                    f"stream; prefill_impl={self.prefill_impl!r} cannot "
+                    "serve it")
+        self.spec_depth_max = max(1, int(opts.spec_depth_max))
+        self.spec_enabled = spec_depth > 0
+        self.spec_depth = min(spec_depth, self.spec_depth_max) \
+            if self.spec_enabled else 0
+        self._spec_len_max = self.spec_depth_max + 1   # 1 pending + k drafts
+        self._drafter = NGramDrafter() if self.spec_enabled else None
+        self.spec_proposed = 0          # drafted tokens verified, lifetime
+        self.spec_accepted = 0          # drafted tokens accepted, lifetime
+        self._tick_spec_proposed = 0
+        self._tick_spec_accepted = 0
+        self._tick_spec_lanes = 0       # draft verify lanes issued
+        self._tick_decode_slots = 0
+        # windowed accept-rate: the sc_spec controller sensor (accepted,
+        # proposed) pairs, token-weighted like the prefix-cache hit window
+        self._accept_window: collections.deque[tuple[int, int]] = \
+            collections.deque(maxlen=slo.window if slo is not None else 64)
+
         self.accountant = HBMAccountant(budget_bytes=hbm_budget_bytes)
         weight_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
                            for x in jax.tree.leaves(params))
@@ -413,7 +451,12 @@ class ServeEngine:
             self._bt_dev = jnp.asarray(self._bt_np)
             self._bt_dirty = False
         else:
-            self.caches = zoo.init_cache(cfg, max_batch, cache_len)
+            # windowed dense rings need headroom for in-flight draft K/V:
+            # a rejected draft's stale entries must age out of the window
+            # before they can alias a live position
+            self.caches = zoo.init_cache(
+                cfg, max_batch, cache_len,
+                ring_margin=self.spec_depth_max if self.spec_enabled else 0)
         self.slot_pos = np.full((max_batch,), -1, np.int64)
         self._slot_tok = jnp.zeros((max_batch,), jnp.int32)
         self._gen_buf = jnp.zeros((max_batch, cache_len), jnp.int32)
@@ -455,6 +498,27 @@ class ServeEngine:
                 nxt, mode="drop")
             return c, tok, gbuf
 
+        def step_spec_fn(p, c, tokens, slot_id, pos, start, seg_len, is_dec,
+                         spec_rows, sample, gidx, spec_idx, draft_len, tok,
+                         gbuf, bt):
+            # the pending token of each spec segment (stream offset
+            # spec_idx[:, 0]) is device-resident; drafts ride host-side
+            safe = jnp.clip(slot_id, 0, max_batch - 1)
+            tokens = jnp.where(is_dec[None, :], tok[safe][None, :], tokens)
+            accept, toks, c = zoo.step_spec(cfg, p, c, tokens, slot_id, pos,
+                                            start, seg_len, spec_rows,
+                                            spec_idx, draft_len,
+                                            block_tables=bt)
+            # emit the accepted prefix plus the model's own next token:
+            # toks[b, :accept[b]+1] lands at gidx[b]..gidx[b]+accept[b]
+            rows = jnp.arange(max_batch)
+            offs = jnp.arange(spec_idx.shape[1], dtype=jnp.int32)[None, :]
+            write = (offs <= accept[:, None]) & sample[:, None]
+            cols = jnp.where(write, gidx[:, None] + offs, gbuf.shape[1])
+            gbuf = gbuf.at[rows[:, None], cols].set(toks, mode="drop")
+            tok = jnp.where(sample, toks[rows, accept], tok)
+            return c, tok, gbuf, accept, toks
+
         def merge_fn(full, one, slot):
             def merge(f, o):
                 axis = None
@@ -479,6 +543,7 @@ class ServeEngine:
                                       donate_argnums=(1, 6, 7))
         self._step_unified = jax.jit(step_unified_fn,
                                      donate_argnums=(1, 10, 11))
+        self._step_spec = jax.jit(step_spec_fn, donate_argnums=(1, 13, 14))
         self._prefill = jax.jit(
             lambda p, b: zoo.prefill(cfg, p, b, cache_len=cache_len))
         self._merge = jax.jit(merge_fn, donate_argnums=(0,))
@@ -547,6 +612,12 @@ class ServeEngine:
         self.sc_chunk = None
         self.sc_admit = None
         self.sc_cache = None
+        self.sc_spec = None
+        # the decode-latency goal is shared: sc_chunk targets it directly,
+        # and the sc_spec knob is SUBORDINATE to it (accept-rate is a soft
+        # goal; a blown decode p99 overrides and shrinks the draft depth)
+        self._decode_goal = latency_goal_s if latency_goal_s is not None \
+            else (slo.decode_s if slo is not None else None)
         # sensor-sanity guardrails for every serve controller: a dropped-out
         # or chaos-corrupted sensor (NaN, negative, physically impossible
         # spike) must never reach Eq. 2 — after 3 consecutive insane
@@ -572,8 +643,7 @@ class ServeEngine:
                 model=ControllerModel(alpha=float(max(1, self.pool.block_bytes)),
                                       lam=0.05, delta=1.15, conf_min=1.0,
                                       conf_max=1e9))
-            decode_goal = latency_goal_s if latency_goal_s is not None \
-                else (slo.decode_s if slo is not None else None)
+            decode_goal = self._decode_goal
             if decode_goal is not None:
                 # alpha: prefill seconds per token, measured lazily; start
                 # 1e-4.  The slew clamp bounds one actuation to a quarter of
@@ -625,6 +695,28 @@ class ServeEngine:
                 model=ControllerModel(alpha=1.0, lam=0.05, delta=1.2,
                                       conf_min=0.05, conf_max=0.9,
                                       integer=False))
+        if enable_smartconf and self.spec_enabled and opts.spec_adaptive:
+            # draft-depth controller: serve.spec_depth is a direct PerfConf
+            # on the windowed accept rate with a LOWER-direction soft goal
+            # (the rate should stay above the setpoint).  alpha < 0 — the
+            # sign-correct gain for an inversely-related pair: deepening the
+            # draft DROPS the accept rate (late draft positions are less
+            # predictable), so a rate above goal opens headroom to deepen
+            # and a rate below it shallows.  The guardrails pin the sensor
+            # to [0, 1] and slew-clamp one actuation to 2 depth steps; the
+            # knob is integer in [1, spec_depth_max] — depth 0 is an
+            # operator choice (spec off), never a controller state, so the
+            # accept-rate sensor always keeps its signal.
+            self.sc_spec = SmartConf(
+                "serve.spec_depth", metric="accept_rate",
+                goal=GoalSpec(float(opts.accept_rate_goal),
+                              direction="lower"),
+                initial=float(self.spec_depth), registry=self.registry,
+                guardrails=Guardrails(perf_lo=0.0, perf_hi=1.0,
+                                      max_step=2.0),
+                model=ControllerModel(alpha=-0.08, lam=0.1, delta=1.3,
+                                      conf_min=1.0,
+                                      conf_max=float(self.spec_depth_max)))
 
         # ------------------------------------------------------- telemetry
         # Off by default, and free when off: a disabled (or absent) hub
@@ -648,13 +740,16 @@ class ServeEngine:
             self._tel_h_ttft = m.histogram("serve.ttft_s")
             self._tel_c_ticks = m.counter("serve.ticks")
             self._tel_c_tokens = m.counter("serve.tokens")
+            self._tel_c_spec_prop = m.counter("serve.spec.proposed")
+            self._tel_c_spec_acc = m.counter("serve.spec.accepted")
+            self._tel_h_spec = m.histogram("serve.spec.accepted_len")
             for reason in RejectReason:
                 m.counter(f"serve.reject.{reason}")
             self._tick_rejects0 = 0
             self._tel_faults_seen = 0
             self._tel_fallback_seen: set[str] = set()
             for sc in (self.sc_queue, self.sc_kv, self.sc_chunk,
-                       self.sc_admit, self.sc_cache):
+                       self.sc_admit, self.sc_cache, self.sc_spec):
                 if sc is not None:
                     sc.attach_audit(self._tel.audit)
 
@@ -759,6 +854,8 @@ class ServeEngine:
         self._tick_dispatches = 0
         self._tick_decode = 0
         self._tick_prefix_hit = 0
+        self._tick_spec_proposed = self._tick_spec_accepted = 0
+        self._tick_spec_lanes = self._tick_decode_slots = 0
         tel = self._tel
         if tel is not None:
             tel.audit.tick = self.ticks_run
@@ -789,7 +886,9 @@ class ServeEngine:
         if tel is not None:
             tel.tracer.phase("schedule")
         self._schedule()
-        if self.prefill_impl == "packed":
+        if self.spec_enabled:
+            n_tokens = self._tick_spec()
+        elif self.prefill_impl == "packed":
             n_tokens = self._tick_unified()
         else:
             if tel is not None:
@@ -856,6 +955,15 @@ class ServeEngine:
                                     if self._prefix_cache is not None
                                     else 0),
             "kv_cache_share": self.kv_cache_share,
+            # speculative-decode sensors (draft-and-verify on the packed
+            # stream); decode_slots is the per-tick KV-read unit the cost
+            # model charges now that decode_tokens can exceed it
+            "spec_depth": self.spec_depth,
+            "accept_rate": (self._tick_spec_accepted
+                            / self._tick_spec_proposed
+                            if self._tick_spec_proposed else 0.0),
+            "spec_lanes": self._tick_spec_lanes,
+            "decode_slots": self._tick_decode_slots,
         }
 
     def run(self, ticks: int) -> list[dict]:
@@ -889,7 +997,7 @@ class ServeEngine:
         tel.flight.record(tick, dict(self._tick_readings))
         faults = 0
         for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit,
-                   self.sc_cache):
+                   self.sc_cache, self.sc_spec):
             if sc is None:
                 continue
             faults += sc.sensor_faults
@@ -1012,6 +1120,20 @@ class ServeEngine:
             self.kv_cache_share = float(self.sc_cache.get_conf())
             self._prefix_cache.enforce(
                 int(self.kv_cache_share * self.pool.max_blocks))
+        if self.sc_spec is not None and self._accept_window:
+            # windowed accept rate drives the depth; no drafts verified yet
+            # -> no observation -> no actuation.  The accept-rate goal is
+            # SOFT and subordinate: when decode p99 blows its (engine-wide)
+            # goal, verifying lanes are what the tick can shed fastest, so
+            # the depth steps down one regardless of what Eq. 2 wants.
+            aw = self._accept_window
+            rate = sum(a for a, _ in aw) / max(1, sum(p for _, p in aw))
+            self.sc_spec.set_perf(self._sense("accept_rate", rate))
+            depth = int(self.sc_spec.get_conf())
+            if (self._decode_goal is not None
+                    and self.decode_latency.p99() > self._decode_goal):
+                depth = min(depth, max(1, self.spec_depth - 1))
+            self.spec_depth = max(1, min(depth, self.spec_depth_max))
 
     def _stamp_first_token(self, req: Request, now: float) -> None:
         """One TTFT sample per request, at the first compute response
@@ -1281,6 +1403,8 @@ class ServeEngine:
         to prefilled=0: recompute on readmission, counted)."""
         self.prefilling.pop(slot, None)
         self.running.pop(slot, None)
+        if self._drafter is not None:
+            self._drafter.drop(slot)
         if req.lease is not None:
             # COW-safe: release only drops THIS lease's references — blocks
             # the radix tree still holds stay resident for future hits
@@ -1486,7 +1610,172 @@ class ServeEngine:
             self.slot_pos[slot] += 1
             req.gen_count += 1
         self._tick_decode = n_dec
+        self._tick_decode_slots = n_dec
         n_tokens = n_dec + int(done.sum())
+        if n_tokens:
+            self.throughput.record(n_tokens)
+        return n_tokens
+
+    # --------------------------------- speculative prefill+decode stream
+    def _tick_spec(self) -> int:
+        """:meth:`_tick_unified` with draft-and-verify decode segments.
+
+        Each running slot's mandatory decode rider grows from one lane to
+        ``1 + d``: the device-resident pending token followed by ``d``
+        host-drafted continuations (``NGramDrafter``, deterministic), all
+        verified by per-offset argmax inside the SAME compiled dispatch
+        that advances prefill chunks.  Greedy acceptance keeps the longest
+        matching draft prefix plus the model's own next token, so a slot
+        emits ``accept + 1`` tokens per dispatch — token-identical to
+        ``accept + 1`` sequential non-speculative ticks by construction
+        (``models/transformer.step_spec``), and ``spec_depth == 0`` is
+        exactly the unified path.  Draft lanes ride the same width budget
+        prefill does; the per-slot clamp keeps every draft inside the
+        request's remaining token and cache budget, so speculation can
+        never over-emit or outrun the KV lease."""
+        if not self.prefilling and not self.running:
+            return 0
+        if self._tel is not None:
+            self._tel.tracer.phase("pack")
+        L = self._spec_len_max
+        k_live = min(self.spec_depth, L - 1)
+        # drafts first — the stream width depends on how many verify lanes
+        # ride this tick
+        drafts: list[tuple[int, Request, np.ndarray]] = []
+        spec_tokens = 0
+        for slot, req in sorted(self.running.items(),
+                                key=lambda sr: sr[1].admit_seq):
+            d_cap = min(k_live, req.max_new_tokens - req.gen_count - 1,
+                        self.cache_len - 1 - int(self.slot_pos[slot]))
+            d = self._drafter.propose(slot, d_cap) if d_cap > 0 \
+                else np.zeros(0, np.int32)
+            drafts.append((slot, req, d))
+            spec_tokens += 1 + len(d)
+        n_dec = len(drafts)
+        budget = max(1, min(int(self.prefill_chunk), self.packed_width))
+        demand = sum(len(r.prompt) - r.prefilled
+                     for r in self.prefilling.values())
+        pre_budget = min(max(1, budget - n_dec), demand) if demand else 0
+        width = min(_bucket(max(1, pre_budget + spec_tokens)),
+                    self.packed_width)
+        width = max(width, pre_budget + spec_tokens)
+        tokens = np.zeros((1, width), np.int32)
+        slot_id = np.full((width,), -1, np.int32)
+        posw = np.zeros((width,), np.int32)
+        start = np.zeros((self.max_batch,), np.int32)
+        seg_len = np.zeros((self.max_batch,), np.int32)
+        is_dec = np.zeros((width,), bool)
+        spec_rows = np.zeros((self.max_batch,), bool)
+        sample = np.zeros((self.max_batch,), bool)
+        gidx = np.full((self.max_batch,), self.cache_len, np.int32)
+        spec_idx = np.zeros((self.max_batch, L), np.int32)
+        draft_len = np.zeros((self.max_batch,), np.int32)
+        done = np.zeros((self.max_batch,), bool)
+        cursor = 0
+        packed: list[tuple[int, Request, int]] = []
+        for slot, req in sorted(self.prefilling.items(),
+                                key=lambda sr: sr[1].admit_seq):
+            if cursor >= pre_budget:
+                break   # later arrivals re-pack from `prefilled` next tick
+            n = min(len(req.prompt) - req.prefilled, pre_budget - cursor)
+            tokens[0, cursor:cursor + n] = \
+                req.prompt[req.prefilled:req.prefilled + n]
+            slot_id[cursor:cursor + n] = slot
+            posw[cursor:cursor + n] = np.arange(req.prefilled,
+                                                req.prefilled + n)
+            start[slot] = req.prefilled
+            seg_len[slot] = n
+            if req.prefilled + n >= len(req.prompt):
+                done[slot] = sample[slot] = True
+                gidx[slot] = 0               # first token -> gen ring head
+                # draft_len = 0, so accept = 0 and the sampled token is the
+                # argmax at the segment's last lane — the first token
+                spec_idx[slot, :] = cursor + n - 1
+            packed.append((slot, req, n))
+            cursor += n
+        pre_cursor = cursor
+        for slot, req, d in drafts:
+            seg = 1 + len(d)
+            spos = int(self.slot_pos[slot])
+            # lane 0 carries a placeholder the jitted step fills from the
+            # device token ring; drafts ride host-side
+            if len(d):
+                tokens[0, cursor + 1:cursor + seg] = d
+            slot_id[cursor:cursor + seg] = slot
+            posw[cursor:cursor + seg] = np.arange(spos, spos + seg)
+            is_dec[cursor] = True
+            start[slot] = spos
+            seg_len[slot] = seg
+            spec_rows[slot] = sample[slot] = True
+            gidx[slot] = min(req.gen_count, self.cache_len)  # ==len => drop
+            spec_idx[slot, :] = cursor + np.minimum(np.arange(L), seg - 1)
+            draft_len[slot] = len(d)
+            cursor += seg
+        t_disp = self.clock()
+        if self._tel is not None:
+            self._tel.tracer.phase("dispatch")
+        (self.caches, self._slot_tok, self._gen_buf, accept_d,
+         toks_d) = self._step_spec(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(slot_id), jnp.asarray(posw), jnp.asarray(start),
+            jnp.asarray(seg_len), jnp.asarray(is_dec),
+            jnp.asarray(spec_rows), jnp.asarray(sample), jnp.asarray(gidx),
+            jnp.asarray(spec_idx), jnp.asarray(draft_len), self._slot_tok,
+            self._gen_buf, self._bt() if self.paged else None)
+        self.model_dispatches += 1
+        self._tick_dispatches += 1
+        self._prefill_shapes.add(width)
+        if packed:
+            self.prefill_calls += 1
+            self._record_prefill_pad(width - spec_tokens, pre_cursor,
+                                     len(packed))
+        self._tick_packed_segments += n_dec
+        # acceptance decides how far every slot advanced: the one host sync
+        # of the tick (accept + per-offset argmaxes feed the drafter)
+        accept = np.asarray(accept_d)
+        tks = np.asarray(toks_d)
+        if self._tel is not None:
+            self._tel.tracer.phase("sample")
+        if n_dec:
+            dt = self.clock() - t_disp
+            self.decode_latency.record(dt)
+            if self._tel is not None and dt > 0.0:
+                self._tel_h_decode.record(dt)
+        now = self.clock()
+        for slot, req, n in packed:
+            req.prefilled += n
+            req.prefill_chunks += 1
+            if done[slot]:
+                req.gen_count = 1            # first token is on device
+                self._stamp_first_token(req, now)
+                self.slot_pos[slot] = len(req.prompt)
+                self.running[slot] = self.prefilling.pop(slot)
+                self._cache_insert(req)
+                self._drafter.begin(slot, req)
+                self._drafter.extend(slot, tks[slot, :1])
+        n_emitted = 0
+        for slot, req, d in drafts:
+            a = int(accept[slot])
+            self._drafter.extend(slot, tks[slot, :a + 1])
+            self.slot_pos[slot] += a + 1
+            req.gen_count += a + 1
+            n_emitted += a + 1
+            self._tick_spec_proposed += len(d)
+            self._tick_spec_accepted += a
+            if self._tel is not None:
+                self._tel_h_spec.record(float(a))
+        if self._tick_spec_proposed:
+            self.spec_proposed += self._tick_spec_proposed
+            self.spec_accepted += self._tick_spec_accepted
+            self._accept_window.append((self._tick_spec_accepted,
+                                        self._tick_spec_proposed))
+            if self._tel is not None:
+                self._tel_c_spec_prop.inc(self._tick_spec_proposed)
+                self._tel_c_spec_acc.inc(self._tick_spec_accepted)
+        self._tick_spec_lanes = spec_tokens - n_dec
+        self._tick_decode = n_emitted
+        self._tick_decode_slots = n_dec
+        n_tokens = n_emitted + int(done.sum())
         if n_tokens:
             self.throughput.record(n_tokens)
         return n_tokens
@@ -1615,6 +1904,7 @@ class ServeEngine:
             req.gen_count += 1
             n += 1
         self._tick_decode = n
+        self._tick_decode_slots = n
         self.throughput.record(n)
         return n
 
@@ -1647,7 +1937,28 @@ class ServeEngine:
             self.finished.append(req)
             del self.running[slot]
             self._free_slots.append(slot)
+            if self._drafter is not None:
+                self._drafter.drop(slot)
             if req.lease is not None:
+                if self.spec_enabled:
+                    # accepted-token KV only: the final sampled token was
+                    # never consumed and any rejected draft tail is junk —
+                    # cut both out of the lease BEFORE the radix tree may
+                    # adopt its blocks, then extend the cacheable prefix
+                    # with the request's own output (prompt + accepted
+                    # continuation), so a repeat of this stream warm-hits
+                    # past the prompt
+                    valid = len(req.prompt) + max(0, len(req.generated) - 1)
+                    req.lease.truncate(valid)
+                    if self._prefix_cache is not None and req.generated:
+                        ext = np.concatenate([
+                            np.asarray(req.prompt, np.int32),
+                            np.asarray(req.generated[:-1], np.int32)])
+                        if self._prefix_cache.insert(ext, req.lease.blocks,
+                                                     self.ticks_run):
+                            self._prefix_cache.enforce(
+                                int(self.kv_cache_share
+                                    * self.pool.max_blocks))
                 req.lease.release()
                 req.lease = None
             self.slot_pos[slot] = -1
@@ -1704,6 +2015,6 @@ class ServeEngine:
             return
         self._closed = True
         for sc in (self.sc_queue, self.sc_kv, self.sc_chunk, self.sc_admit,
-                   self.sc_cache):
+                   self.sc_cache, self.sc_spec):
             if sc is not None:
                 sc.close()

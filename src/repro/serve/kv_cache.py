@@ -65,6 +65,14 @@ class DenseKVLease:
             raise ValueError("extend on released lease")
         return self._pool.ensure(self._key, tokens)
 
+    def truncate(self, tokens: int) -> int:
+        """Shrink to cover at most ``tokens`` logical tokens, crediting
+        whole trailing blocks back to the ledger (the speculative-decode
+        finish path).  Returns the number of blocks freed."""
+        if self.released:
+            raise ValueError("truncate on released lease")
+        return self._pool.shrink(self._key, tokens)
+
     def release(self) -> None:
         if self.released:
             return
@@ -124,6 +132,24 @@ class KVBlockPool:
         if self.accountant is not None:
             self.accountant.charge("kv_cache", delta * self.block_bytes)
         return True
+
+    def shrink(self, seq_id: int, tokens: int) -> int:
+        """Shrink seq to cover at most ``tokens``; inverse of ``ensure``.
+        Returns blocks freed (0 when the extent already fits)."""
+        seq = self._seqs.get(seq_id)
+        if seq is None:
+            return 0
+        tokens = max(0, int(tokens))
+        keep = (tokens + self.block_tokens - 1) // self.block_tokens
+        freed = seq.blocks - keep
+        seq.tokens = min(seq.tokens, tokens)
+        if freed <= 0:
+            return 0
+        seq.blocks = keep
+        self.used_blocks -= freed
+        if self.accountant is not None:
+            self.accountant.credit("kv_cache", freed * self.block_bytes)
+        return freed
 
     def free(self, seq_id: int) -> None:
         seq = self._seqs.pop(seq_id, None)

@@ -70,12 +70,18 @@ class ServeOptions:
     prefix_hit_rate_goal: float = 0.3   # sc_cache goal (direction="lower")
     # --- block-level sliding-window eviction (all-window archs) ---
     window_evict: bool = True
+    # --- self-speculative decode (packed prefill mode only) ---
+    spec_depth: int = 0                 # initial draft depth k; 0 = off
+    spec_depth_max: int = 8             # conf_max for sc_spec (<= 15)
+    spec_adaptive: bool = True          # sc_spec actuates serve.spec_depth
+    accept_rate_goal: float = 0.5       # sc_spec setpoint (direction="lower")
     # --- hooks ---
     sensor_tap: Callable[[str, float], float] | None = None
     telemetry: "Telemetry | None" = None
     # --- resolve() outputs (env state, recorded for the engine) ---
     prefill_env_forced: bool = False
     telemetry_env: bool = False
+    spec_env_forced: bool = False
 
     def resolve(self, env=os.environ) -> "ServeOptions":
         """The single environment-resolution point.
@@ -87,17 +93,29 @@ class ServeOptions:
         raising on archs that cannot serve it.  ``one_shot`` is accepted
         as an alias for ``legacy`` in both the field and the env var.
         ``REPRO_TELEMETRY`` (any value but empty/``0``) force-enables
-        telemetry when no hub was passed."""
+        telemetry when no hub was passed.  ``REPRO_SPEC_DEPTH`` (a positive
+        int) force-enables speculative decode at that depth when the caller
+        left ``spec_depth=0`` (the CI spec leg); ``spec_env_forced`` records
+        the provenance so the engine silently degrades to k=0 on engines
+        that cannot speculate instead of raising."""
+        # idempotent: the engine resolves whatever it is handed, so a
+        # caller-resolved options object must keep its *_env* outputs
         pm = self.prefill_mode
         if pm == "one_shot":
             pm = "legacy"
-        forced = False
+        forced = self.prefill_env_forced
         if pm == "auto":
             e = env.get("REPRO_PREFILL_MODE", "").strip() or "auto"
             e = "legacy" if e == "one_shot" else e
             if e != "auto":
                 pm, forced = e, True
         tel_env = env.get("REPRO_TELEMETRY", "").strip() not in ("", "0")
+        sd, sd_forced = self.spec_depth, self.spec_env_forced
+        if sd == 0:
+            e = env.get("REPRO_SPEC_DEPTH", "").strip()
+            if e and e != "0":
+                sd, sd_forced = int(e), True
         return dataclasses.replace(self, prefill_mode=pm,
                                    prefill_env_forced=forced,
-                                   telemetry_env=tel_env)
+                                   telemetry_env=tel_env,
+                                   spec_depth=sd, spec_env_forced=sd_forced)

@@ -29,16 +29,15 @@ The allocation surface is the :class:`KVLease` handle API:
   * :meth:`KVLease.trim_front` drops a lease's leading blocks (interior
     ``-1`` table entries are masked by every paged kernel), the block-level
     sliding-window eviction path for all-window archs;
+  * :meth:`KVLease.truncate` drops trailing blocks beyond a token extent —
+    the speculative-decode finish path, which cuts rejected-draft K/V out
+    of the lease before the prefix cache may adopt its blocks;
   * shrinking the budget below occupancy reports ``over_budget`` — the
     engine evicts cold cache prefixes, preempts lowest-priority sequences
     (paper §4.2 temporary-inconsistency semantics), then physically resizes
     the store via :meth:`compact` / :meth:`grow`.  ``remap_hook`` lets a
     block-id holder outside the lease registry (the prefix cache) follow a
     compaction's renumbering.
-
-The seed's seq_id-keyed ``ensure`` / ``free`` / ``table_row`` surface
-remains as a deprecation shim for one PR (each call warns
-``DeprecationWarning`` and delegates to an internally-held lease).
 
 The accountant entry ``kv_cache`` tracks the *store capacity* — the bytes
 the block store actually pins in HBM — so budget cuts move ``hbm_bytes``
@@ -48,7 +47,6 @@ itself, not just a ledger.  All bookkeeping is O(blocks touched); a failed
 
 from __future__ import annotations
 
-import warnings
 from collections.abc import Callable, Sequence
 
 import numpy as np
@@ -129,6 +127,14 @@ class KVLease:
         the number of references dropped."""
         return self._alloc._trim_front(self, first_keep_block)
 
+    def truncate(self, tokens: int) -> int:
+        """Shrink the lease to cover at most ``tokens`` logical tokens,
+        releasing whole trailing blocks past that extent (the
+        speculative-decode finish path: rejected-draft K/V lives past the
+        last emitted token and must not survive into the prefix cache).
+        Returns the number of references dropped."""
+        return self._alloc._truncate(self, tokens)
+
     def release(self) -> None:
         """Drop the lease's references; idempotent.  Blocks whose count
         hits zero return to the free list (LIFO)."""
@@ -143,8 +149,8 @@ class PagedKVAllocator:
     ``over_budget`` / ``frag_tokens``), the :class:`KVLease` handle API
     (``lease`` / ``incref_blocks`` / ``decref_blocks``), and the
     physical-side API (``compact`` / ``grow`` + ``remap_hook``).  The
-    legacy seq_id-keyed ``ensure`` / ``free`` / ``table_row`` surface is a
-    deprecation shim over an internal seq_id->lease map.
+    :class:`KVLease` handle API is the only allocation surface — the
+    seed's seq_id-keyed ``ensure`` / ``free`` / ``table_row`` shim is gone.
     """
 
     def __init__(self, cfg: ArchConfig, *, block_tokens: int,
@@ -167,7 +173,6 @@ class PagedKVAllocator:
         # blocks referenced from outside the lease registry (the prefix
         # cache) follow a compaction's renumbering through this hook
         self.remap_hook: Callable[[dict[int, int]], None] | None = None
-        self._shim: dict[int, KVLease] = {}
         self.alloc_failures = 0
         self._charge_capacity()
 
@@ -333,46 +338,24 @@ class PagedKVAllocator:
         self.decref_blocks(drop)
         return len(drop)
 
+    def _truncate(self, ls: KVLease, tokens: int) -> int:
+        if ls.released:
+            raise ValueError("truncate on released lease")
+        tokens = max(0, int(tokens))
+        keep = (tokens + self.block_tokens - 1) // self.block_tokens
+        drop = [b for b in ls.blocks[keep:] if b >= 0]
+        del ls.blocks[keep:]
+        ls.tokens = min(ls.tokens, tokens)
+        if drop:
+            self.decref_blocks(drop)
+        return len(drop)
+
     def _release(self, ls: KVLease) -> None:
         if ls.released:
             return
         ls.released = True
         self._leases.pop(ls.lease_id, None)
         self.decref_blocks([b for b in ls.blocks if b >= 0])
-
-    # --------------------------------------------------- deprecated shim
-    def _shim_warn(self, name: str) -> None:
-        warnings.warn(
-            f"PagedKVAllocator.{name}() is deprecated: use the KVLease "
-            "handle API (lease/extend/release/table_row)",
-            DeprecationWarning, stacklevel=3)
-
-    def ensure(self, seq_id: int, tokens: int) -> bool:
-        """Deprecated: ``lease()`` / ``KVLease.extend()``."""
-        self._shim_warn("ensure")
-        ls = self._shim.get(seq_id)
-        if ls is not None:
-            return ls.extend(tokens)
-        ls = self.lease(tokens)
-        if ls is None:
-            return False
-        self._shim[seq_id] = ls
-        return True
-
-    def free(self, seq_id: int) -> None:
-        """Deprecated: ``KVLease.release()``."""
-        self._shim_warn("free")
-        ls = self._shim.pop(seq_id, None)
-        if ls is not None:
-            ls.release()
-
-    def table_row(self, seq_id: int) -> np.ndarray:
-        """Deprecated: ``KVLease.table_row()``."""
-        self._shim_warn("table_row")
-        ls = self._shim.get(seq_id)
-        if ls is None:
-            return np.full((self.max_blocks_per_seq,), -1, np.int32)
-        return ls.table_row()
 
     # ------------------------------------------------------ physical resize
     def compact(self, new_capacity: int) -> np.ndarray:

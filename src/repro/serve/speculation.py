@@ -1,0 +1,164 @@
+"""Self-speculative drafting for the packed serving stream.
+
+``NGramDrafter`` is a deterministic prompt-lookup / n-gram drafter
+(no second model): per slot it maintains the token history — prompt +
+every *accepted* output token — and a suffix-keyed table mapping each
+n-gram (n in ``[ngram_min, ngram_max]``) to the position right after its
+two most recent occurrences.  ``propose(slot, k)`` matches the longest
+suffix of the current history against the table and copies up to ``k``
+tokens that followed the previous occurrence.  Pure host-side data
+structure: no RNG, no device work — identical inputs always produce
+identical drafts, which is what makes the engine's acceptance rule
+token-identity-preserving end to end.
+
+The engine verifies drafts with greedy acceptance: a drafted token is
+kept iff it equals the model's own argmax at that position, so the
+drafter is purely a *performance* hint — a bad draft costs verify lanes,
+never correctness.
+
+``markov_params`` crafts model weights whose greedy decode follows an
+explicit token->token map (blocks zeroed out, the head wired to the
+normalized embedding rows).  Benchmarks and tests use it to build
+acceptance *regimes* on demand — fully-predictable (repetitive /
+code-like) and adversarial (drafts always rejected) workloads — through
+the real engine, kernels, and acceptance rule.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["NGramDrafter", "markov_params"]
+
+
+class _SlotHistory:
+    """Token history + suffix-keyed n-gram table for one slot."""
+
+    __slots__ = ("toks", "table")
+
+    def __init__(self, ngram_min: int, ngram_max: int) -> None:
+        self.toks: list[int] = []
+        # per n: key (n-gram tuple) -> (latest end-position, previous one).
+        # The entry for the *current* tail always holds the tail itself in
+        # slot 0, so ``propose`` reads the previous occurrence from slot 1.
+        self.table: dict[int, dict[tuple, tuple[int, int | None]]] = {
+            n: {} for n in range(ngram_min, ngram_max + 1)}
+
+    def append(self, tok: int) -> None:
+        self.toks.append(tok)
+        end = len(self.toks)
+        for n, tab in self.table.items():
+            if end < n:
+                continue
+            key = tuple(self.toks[end - n:end])
+            old = tab.get(key)
+            tab[key] = (end, old[0] if old is not None else None)
+
+
+class NGramDrafter:
+    """Deterministic suffix-match drafter over prompt + accepted output."""
+
+    def __init__(self, ngram_max: int = 3, ngram_min: int = 1) -> None:
+        if not 1 <= ngram_min <= ngram_max:
+            raise ValueError(f"bad n-gram range [{ngram_min}, {ngram_max}]")
+        self.ngram_min = int(ngram_min)
+        self.ngram_max = int(ngram_max)
+        self._slots: dict[int, _SlotHistory] = {}
+
+    # -- lifecycle (engine slot protocol) ---------------------------------
+
+    def begin(self, slot: int, req) -> None:
+        """(Re)seed a slot's history from a request's prompt."""
+        h = _SlotHistory(self.ngram_min, self.ngram_max)
+        for t in np.asarray(req.prompt).tolist():
+            h.append(int(t))
+        self._slots[slot] = h
+
+    def extend(self, slot: int, toks) -> None:
+        """Record newly *accepted* (emitted) tokens for a slot."""
+        h = self._slots.get(slot)
+        if h is None:
+            return
+        for t in np.asarray(toks).tolist():
+            h.append(int(t))
+
+    def drop(self, slot: int) -> None:
+        """Forget a slot (finish, preemption, requeue)."""
+        self._slots.pop(slot, None)
+
+    # -- drafting ----------------------------------------------------------
+
+    def propose(self, slot: int, k: int) -> np.ndarray:
+        """Up to ``k`` draft tokens continuing the slot's history.
+
+        Longest-suffix match wins; within one n the most recent previous
+        occurrence wins.  Returns an empty array when no suffix of the
+        history has occurred before.
+        """
+        h = self._slots.get(slot)
+        if h is None or k <= 0:
+            return np.zeros(0, np.int32)
+        end = len(h.toks)
+        for n in range(self.ngram_max, self.ngram_min - 1, -1):
+            if end < n:
+                continue
+            hit = h.table[n].get(tuple(h.toks[end - n:end]))
+            if hit is None:
+                continue
+            # slot 0 is the tail itself (registered on append); the draft
+            # source is the *previous* occurrence
+            src = hit[1] if hit[0] == end else hit[0]
+            if src is None or src >= end:
+                continue
+            d = min(k, end - src)
+            return np.asarray(h.toks[src:src + d], np.int32)
+        return np.zeros(0, np.int32)
+
+
+# --------------------------------------------------------------------------
+# crafted-weight fixture: a model whose greedy decode IS a token map
+# --------------------------------------------------------------------------
+
+def markov_params(cfg, params, mapping: dict[int, int]):
+    """Craft ``params`` so greedy decode emits ``mapping[last_token]``.
+
+    Every residual-block contribution is zeroed (attention ``wo`` and MLP
+    ``w_down``), so the final hidden state of a position is exactly the
+    normalized embedding of its token; the (untied) head is then wired so
+    ``argmax(logits(t)) == mapping[t]`` for every token in the map.  The
+    result runs through the real forward pass / kernels — only the
+    *content* of the weights is synthetic.  Requires a dense
+    attention+MLP arch with ``tie_embeddings=False``; raises if any
+    mapped token's argmax cannot be verified.
+    """
+    import jax.numpy as jnp
+    import jax.tree_util as jtu
+
+    from ..models import layers
+
+    if cfg.tie_embeddings:
+        raise ValueError("markov_params needs an untied head")
+
+    flat, treedef = jtu.tree_flatten_with_path(params)
+    leaves = []
+    for path, leaf in flat:
+        last = getattr(path[-1], "key", None)
+        if last in ("wo", "w_down"):
+            leaf = jnp.zeros_like(leaf)
+        leaves.append(leaf)
+    out = jtu.tree_unflatten(treedef, leaves)
+
+    emb = jnp.asarray(out["embed"])
+    en = np.asarray(layers.apply_norm(
+        cfg.norm, {"scale": out["ln_f"]["scale"]}, emb))
+    v, d = en.shape
+    head = np.zeros((d, v), np.float32)
+    for t, j in mapping.items():
+        head[:, j] += en[t] / float(en[t] @ en[t])
+    logits = en @ head
+    bad = [t for t, j in mapping.items() if int(np.argmax(logits[t])) != j]
+    if bad:
+        raise ValueError(f"embedding cross-talk broke the map at {bad}")
+    out = dict(out)
+    out["head"] = jnp.asarray(head)
+    return out

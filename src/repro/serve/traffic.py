@@ -271,18 +271,29 @@ class VirtualClock:
 @dataclasses.dataclass(frozen=True)
 class TickCostModel:
     """Virtual seconds charged per engine tick.  Prefill is charged per
-    *issued* lane slot (padding costs compute too); decode per token."""
+    *issued* lane slot (padding costs compute too); decode per decoding
+    SLOT (the KV-read unit: with speculation one slot can emit several
+    tokens per dispatch, but reads its history once), plus a cheap
+    per-draft-lane verify charge — this is what makes speculation's
+    economics real in virtual time: accepted drafts amortize the slot
+    cost, rejected ones still pay their verify lanes."""
 
     base_s: float = 2e-3
     prefill_token_s: float = 5e-5
     decode_token_s: float = 8e-4
+    spec_lane_s: float = 1e-4
 
     def cost(self, stats: dict) -> float:
         issued = stats.get("prefill_issued_tokens", stats.get(
             "prefill_tokens", 0))
+        # decode_slots fell out of the frozen stats schema only with the
+        # speculation PR; older dicts fall back to decode_tokens (equal
+        # whenever speculation is off)
+        slots = stats.get("decode_slots", stats.get("decode_tokens", 0))
         return (self.base_s
                 + self.prefill_token_s * float(issued)
-                + self.decode_token_s * float(stats.get("decode_tokens", 0)))
+                + self.decode_token_s * float(slots)
+                + self.spec_lane_s * float(stats.get("spec_lanes", 0)))
 
 
 # --------------------------------------------------------------------------

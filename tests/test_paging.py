@@ -131,35 +131,54 @@ def test_allocator_fragmentation_sensor(small_model):
     assert pool.frag_tokens == 0
 
 
-def test_allocator_legacy_shim_warns_and_matches_lease(small_model):
-    """The deprecated seq_id-keyed surface (ensure/free/table_row) must
-    still work — it is a thin shim over leases — and every call must warn
-    DeprecationWarning.  Accounting parity: a shim-held sequence and a
-    lease are indistinguishable to the pool's sensors."""
+def test_allocator_lease_surface_is_complete(small_model):
+    """The KVLease handle API is the allocator's ONLY surface (the seed's
+    seq_id-keyed ensure/free/table_row shim is gone).  Accounting parity:
+    two independent leases are indistinguishable to the pool's sensors,
+    growth is append-only, and release is idempotent."""
     cfg, _ = small_model
     pool = _alloc(cfg)
-    with pytest.warns(DeprecationWarning, match="lease"):
-        assert pool.ensure(1, 40)                # 3 blocks
-    with pytest.warns(DeprecationWarning):
-        shim_ids = [b for b in pool.table_row(1) if b >= 0]
-    ls = pool.lease(40)
-    lease_ids = [b for b in ls.table_row() if b >= 0]
-    assert len(shim_ids) == len(lease_ids) == 3
-    assert not set(shim_ids) & set(lease_ids)    # disjoint physical blocks
+    for name in ("ensure", "free"):              # the shim did not survive
+        assert not hasattr(pool, name)
+    ls1 = pool.lease(40)                         # 3 blocks
+    ids1 = [b for b in ls1.table_row() if b >= 0]
+    ls2 = pool.lease(40)
+    ids2 = [b for b in ls2.table_row() if b >= 0]
+    assert len(ids1) == len(ids2) == 3
+    assert not set(ids1) & set(ids2)             # disjoint physical blocks
     assert pool.used_blocks == 6 and pool.live_seqs == 2
-    with pytest.warns(DeprecationWarning):
-        assert pool.ensure(1, 50)                # shim extend in place
-    with pytest.warns(DeprecationWarning):
-        assert [b for b in pool.table_row(1)
-                if b >= 0][:3] == shim_ids       # append-only growth
-    with pytest.warns(DeprecationWarning):
-        pool.free(99)                            # unknown seq: no-op
-    with pytest.warns(DeprecationWarning):
-        pool.free(1)
-    with pytest.warns(DeprecationWarning):
-        pool.free(1)                             # double free: no-op
-    ls.release()
+    assert ls1.extend(50)                        # grow in place
+    assert [b for b in ls1.table_row()
+            if b >= 0][:3] == ids1               # append-only growth
+    ls1.release()
+    ls1.release()                                # double release: no-op
+    ls2.release()
     assert pool.used_blocks == 0 and pool.live_seqs == 0
+
+
+def test_allocator_lease_truncate(small_model):
+    """KVLease.truncate drops whole trailing blocks past a token extent
+    (the speculative-decode finish path): freed blocks return to the pool,
+    the extent clamps, and a mid-block cut keeps the boundary block."""
+    cfg, _ = small_model
+    acc = HBMAccountant()
+    pool = _alloc(cfg, capacity=8, bt=16, accountant=acc)
+    ls = pool.lease(60)                          # 4 blocks
+    assert pool.used_blocks == 4
+    assert ls.truncate(33) == 1                  # 33 tokens -> 3 blocks
+    assert pool.used_blocks == 3 and ls.tokens == 33
+    assert ls.truncate(33) == 0                  # idempotent at the extent
+    assert pool.frag_tokens == 15                # 3 blocks hold 33 tokens
+    assert ls.truncate(16) == 2                  # exact boundary -> 1 block
+    assert pool.used_blocks == 1 and ls.tokens == 16
+    # the ledger tracks capacity, not leases: truncate moves used_blocks
+    # and frag only
+    assert acc.breakdown()["kv_cache"] == 8 * pool.block_bytes
+    assert pool.frag_tokens == 0
+    ls.release()
+    assert pool.used_blocks == 0
+    with pytest.raises(ValueError, match="released"):
+        ls.truncate(0)
 
 
 def test_dense_pool_pressure_sensors(small_model):
@@ -312,7 +331,10 @@ def test_bench_serving_smoke():
             "serving_arch_deepseek_compile_reduction",
             # radix prefix cache: warm run token-identical to cold with
             # real hits, COW copies, and reclaimed prefill
-            "serving_prefix_cache"} <= names
+            "serving_prefix_cache",
+            # self-speculative decode: token-identical to k=0 with >1.3
+            # emitted tokens per slot per dispatch on the repetitive regime
+            "serving_speculative"} <= names
     cut = {r.split(",")[0]: r for r in rows}
     paged_freed = int(cut["serving_kv_budget_cut_paged"]
                       .split("freed=")[1].split()[0])
@@ -325,3 +347,7 @@ def test_bench_serving_smoke():
     assert float(pc.split("hit_rate=")[1].split()[0]) > 0
     assert int(pc.split("reclaimed_tokens=")[1].split()[0]) > 0
     assert float(pc.split("prefill_reduction=")[1].split()[0]) >= 0.30
+    sp = cut["serving_speculative"]
+    assert "identical=True" in sp
+    assert float(sp.split("tokens_per_slot_dispatch=")[1].split()[0]) > 1.3
+    assert int(sp.split("max_dispatches=")[1].split()[0]) == 1

@@ -1,0 +1,399 @@
+"""Self-speculative decode on the packed stream: drafter determinism,
+engine-level token identity against the k=0 oracle for every text arch
+(dense AND paged, including mid-draft rejection with KV truncation and
+slot reuse afterward), the prefix-cache poison regression, SmartConf
+depth actuation, and chaos survival with speculation live.
+
+The acceptance rule makes token identity hold *by construction* — a
+drafted token is kept iff it equals the model's own argmax — so every
+parity test here is a test of the KV bookkeeping around rejection, not
+of the drafter's quality.  ``OracleDrafter`` replays a reference
+continuation with deterministic corruption, pinning the accept/reject
+schedule independent of model content; ``markov_params`` builds the
+full-accept regime through real weights."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.serve import (ChaosMonkey, ChaosSpec, Request, ServeEngine,
+                         ServeOptions)
+from repro.serve.speculation import NGramDrafter, markov_params
+from repro.models import zoo
+
+TEXT_ARCHS = [a for a in ARCH_IDS if a not in ("whisper-tiny",
+                                               "internvl2-1b")]
+PROMPT_LENS = (5, 19, 33)
+MAX_NEW = 6
+
+
+@pytest.fixture(autouse=True)
+def _no_spec_env(monkeypatch):
+    # the CI spec leg exports REPRO_SPEC_DEPTH for the whole suite; this
+    # file builds its own k=0 baselines, which must stay genuinely k=0
+    monkeypatch.delenv("REPRO_SPEC_DEPTH", raising=False)
+
+
+def _smoke_cfg(arch_id):
+    cfg = reduced(get_config(arch_id))
+    if cfg.moe:   # ample capacity -> deterministic routing for equivalence
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+class OracleDrafter:
+    """Replays a reference continuation as the draft, corrupting one
+    token of every ``corrupt_every``-th proposal so mid-draft rejection
+    (partial accept + KV overwrite of the rejected suffix) is exercised
+    on a deterministic schedule.  Correct drafts are accepted in full;
+    corrupted ones are rejected exactly at the corrupted offset."""
+
+    def __init__(self, refs, vocab, corrupt_every=0):
+        self.refs = {r: [int(t) for t in toks] for r, toks in refs.items()}
+        self.vocab = int(vocab)
+        self.corrupt_every = corrupt_every
+        self.calls = 0
+        self._rid = {}
+        self._emitted = {}
+
+    def begin(self, slot, req):
+        self._rid[slot] = req.req_id
+        self._emitted[slot] = 0
+
+    def extend(self, slot, toks):
+        if slot in self._emitted:
+            self._emitted[slot] += int(np.asarray(toks).size)
+
+    def drop(self, slot):
+        self._rid.pop(slot, None)
+        self._emitted.pop(slot, None)
+
+    def propose(self, slot, k):
+        rid = self._rid.get(slot)
+        if rid is None or k <= 0:
+            return np.zeros(0, np.int32)
+        e = self._emitted[slot]
+        d = np.asarray(self.refs.get(rid, [])[e:e + k], np.int32)
+        self.calls += 1
+        if (self.corrupt_every and d.size
+                and self.calls % self.corrupt_every == 0):
+            d = d.copy()
+            j = d.size // 2
+            d[j] = (int(d[j]) + 1) % self.vocab   # != the model's argmax
+        return d
+
+
+def _run(cfg, params, prompts, *, spec_depth=0, drafter=None,
+         kv_mode="auto", max_batch=2, cache_len=96, max_new=MAX_NEW, **kw):
+    eng = ServeEngine(cfg, params, max_batch=max_batch, cache_len=cache_len,
+                      enable_smartconf=False, prefill_mode="packed",
+                      kv_mode=kv_mode, spec_depth=spec_depth, **kw)
+    if drafter is not None:
+        eng._drafter = drafter
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, np.asarray(p, np.int32), max_new))
+    ticks = max_dispatches = 0
+    while len(eng.finished) < len(prompts) and ticks < 400:
+        st = eng.tick()
+        ticks += 1
+        max_dispatches = max(max_dispatches, st["dispatches"])
+    assert len(eng.finished) == len(prompts), cfg.name
+    outs = {r.req_id: list(r.generated) for r in eng.finished}
+    stats = dict(max_dispatches=max_dispatches, ticks=ticks,
+                 proposed=eng.spec_proposed, accepted=eng.spec_accepted,
+                 paged=eng.paged)
+    eng.close()
+    return outs, stats
+
+
+# -------------------------------------------------------------- drafter unit
+
+def test_ngram_drafter_deterministic_longest_suffix():
+    hist = np.asarray([7, 1, 2, 3, 9, 1, 2], np.int32)
+    d1, d2 = NGramDrafter(), NGramDrafter()
+    d1.begin(0, Request(0, hist, 4))
+    d2.begin(0, Request(0, hist, 4))
+    a, b = d1.propose(0, 4), d2.propose(0, 4)
+    np.testing.assert_array_equal(a, b)            # determinism
+    # longest matching suffix is the bigram (1, 2) whose previous
+    # occurrence ends at position 3 -> the draft copies what followed it
+    np.testing.assert_array_equal(a, [3, 9, 1, 2])
+    np.testing.assert_array_equal(d1.propose(0, 2), [3, 9])  # k caps it
+
+
+def test_ngram_drafter_lifecycle_and_empty_cases():
+    d = NGramDrafter()
+    d.begin(0, Request(0, np.arange(5, dtype=np.int32), 4))
+    assert d.propose(0, 4).size == 0      # no suffix has repeated
+    assert d.propose(0, 0).size == 0      # k == 0
+    assert d.propose(7, 4).size == 0      # unknown slot
+    d.extend(7, [1, 2])                   # unknown slot: no-op
+    d.extend(0, [3, 4])                   # history is now 0,1,2,3,4,3,4
+    # bigram (3, 4) previously ended at position 5 -> copy what followed
+    np.testing.assert_array_equal(d.propose(0, 3), [3, 4])
+    d.drop(0)
+    assert d.propose(0, 4).size == 0
+    with pytest.raises(ValueError):
+        NGramDrafter(ngram_max=0)
+
+
+# ------------------------------------------------- engine-level token parity
+
+@pytest.mark.parametrize("arch_id", TEXT_ARCHS)
+def test_spec_matches_plain_every_text_arch(arch_id, rng):
+    """All 8 text archs: the speculating engine (kv auto: paged where
+    supported, dense rings/states elsewhere) is token-identical to the
+    k=0 engine, in ONE dispatch per tick, with drafts corrupted on a
+    fixed schedule so partial accepts and full rejections both occur —
+    and slots are reused across requests (3 prompts, max_batch=2)."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in PROMPT_LENS]
+    plain, _ = _run(cfg, params, prompts)
+    oracle = OracleDrafter(plain, cfg.vocab_size, corrupt_every=2)
+    spec, st = _run(cfg, params, prompts, spec_depth=3, drafter=oracle)
+    assert spec == plain, arch_id
+    assert st["max_dispatches"] == 1
+    assert st["proposed"] > 0
+    assert 0 < st["accepted"] < st["proposed"]   # accepts AND rejections
+
+
+@pytest.mark.parametrize("arch_id", ["yi-6b", "gemma3-4b"])
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+def test_spec_dense_and_paged_explicit(arch_id, kv_mode, rng):
+    """Explicit dense AND paged KV: dense covers the flat cache and the
+    gemma3 windowed rings (whose ring margin absorbs in-flight drafts),
+    paged covers write-then-gather with rejected-suffix overwrite."""
+    cfg = _smoke_cfg(arch_id)
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in PROMPT_LENS]
+    plain, _ = _run(cfg, params, prompts, kv_mode=kv_mode)
+    oracle = OracleDrafter(plain, cfg.vocab_size, corrupt_every=2)
+    spec, st = _run(cfg, params, prompts, spec_depth=4, drafter=oracle,
+                    kv_mode=kv_mode)
+    assert spec == plain, (arch_id, kv_mode)
+    assert st["paged"] == (kv_mode == "paged")
+    assert st["max_dispatches"] == 1
+    assert st["proposed"] > 0 and st["accepted"] < st["proposed"]
+
+
+def test_spec_always_rejected_is_still_identical(rng):
+    """The adversarial floor: every draft wrong, every tick a full
+    rejection + KV overwrite — output must not move, and throughput
+    degrades to exactly one token per decode tick."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, 19).astype(np.int32)]
+    plain, plain_st = _run(cfg, params, prompts, max_new=8)
+    bad = {r: [(t + 1) % cfg.vocab_size for t in toks]
+           for r, toks in plain.items()}
+    spec, st = _run(cfg, params, prompts, spec_depth=4, max_new=8,
+                    drafter=OracleDrafter(bad, cfg.vocab_size))
+    assert spec == plain
+    assert st["proposed"] > 0 and st["accepted"] == 0
+    assert st["ticks"] == plain_st["ticks"]   # no speedup, no slowdown
+
+
+# ------------------------------------------------------------- k=0 contract
+
+def test_spec_off_is_todays_path(rng):
+    """k=0 builds no drafter, counts nothing, and IS the existing packed
+    engine; explicitly requesting speculation off the packed path raises,
+    while the env-forced CI leg silently degrades to k=0."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      enable_smartconf=False, prefill_mode="packed")
+    assert not eng.spec_enabled and eng._drafter is None
+    assert eng.spec_proposed == eng.spec_accepted == 0
+    eng.close()
+    with pytest.raises(ValueError, match="packed"):
+        ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                    enable_smartconf=False, prefill_mode="bucketed",
+                    spec_depth=2)
+    # env-forced depth on an engine that cannot speculate: degrade, not die
+    opts = ServeOptions(max_batch=2, cache_len=96, enable_smartconf=False,
+                        prefill_mode="bucketed").resolve(
+        env={"REPRO_SPEC_DEPTH": "2"})
+    assert opts.spec_depth == 2 and opts.spec_env_forced
+    eng = ServeEngine(cfg, params, options=opts)
+    assert not eng.spec_enabled
+    eng.close()
+    # ... and on one that can: forced on at the env depth
+    opts = ServeOptions(max_batch=2, cache_len=96, enable_smartconf=False,
+                        prefill_mode="packed").resolve(
+        env={"REPRO_SPEC_DEPTH": "2"})
+    eng = ServeEngine(cfg, params, options=opts)
+    assert eng.spec_enabled and eng.spec_depth == 2
+    eng.close()
+
+
+# ----------------------------------------------- acceptance regimes (markov)
+
+@pytest.fixture(scope="module")
+def markov():
+    cfg = reduced(get_config("yi-6b"))
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    return cfg, markov_params(cfg, params, {t: (t + 1) % 8
+                                            for t in range(8)})
+
+
+def test_markov_full_accept_regime(markov):
+    """Crafted weights whose decode IS a token cycle: the real NGram
+    drafter reads the cycle out of the prompt, so accepts approach 100%
+    and the spec engine finishes in strictly fewer ticks."""
+    cfg, params = markov
+    prompts = [np.tile(np.arange(8, dtype=np.int32), 3)]   # 24-token cycle
+    plain, plain_st = _run(cfg, params, prompts, max_new=16)
+    assert plain[0] == [(24 + i) % 8 for i in range(16)]   # the map, decoded
+    spec, st = _run(cfg, params, prompts, spec_depth=4, max_new=16)
+    assert spec == plain
+    assert st["proposed"] > 0
+    assert st["accepted"] / st["proposed"] > 0.8
+    assert st["ticks"] < plain_st["ticks"]
+    assert st["max_dispatches"] == 1
+
+
+def test_sc_spec_depth_adapts_both_ways(markov, rng):
+    """The serve.spec_depth controller: a fully-predictable stream holds
+    the accept rate above the setpoint and the depth deepens from its
+    initial value; an always-rejected stream drives it to the floor of 1
+    (never 0 — spec off is an operator choice, not a controller state)."""
+    cfg, params = markov
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      prefill_mode="packed", spec_depth=2)
+    assert eng.sc_spec is not None
+    eng.submit(Request(0, np.tile(np.arange(8, dtype=np.int32), 3), 48))
+    ticks = 0
+    while len(eng.finished) < 1 and ticks < 400:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 1
+    assert eng.spec_depth > 2, "full-accept stream should deepen the draft"
+    audit_free = eng.sc_spec.sensor_faults == 0
+    eng.close()
+    assert audit_free
+
+    cfg2 = _smoke_cfg("yi-6b")
+    params2, _ = zoo.init(cfg2, jax.random.key(0))
+    prompts = [rng.integers(0, cfg2.vocab_size, 19).astype(np.int32)]
+    plain, _ = _run(cfg2, params2, prompts, max_new=24)
+    bad = {0: [(t + 1) % cfg2.vocab_size for t in plain[0]]}
+    eng = ServeEngine(cfg2, params2, max_batch=2, cache_len=96,
+                      prefill_mode="packed", spec_depth=4)
+    eng._drafter = OracleDrafter(bad, cfg2.vocab_size)
+    eng.submit(Request(0, prompts[0], 24))
+    ticks = 0
+    while len(eng.finished) < 1 and ticks < 400:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 1
+    assert list(eng.finished[0].generated) == plain[0]
+    assert eng.spec_depth == 1, "all-rejected stream should hit the floor"
+    eng.close()
+
+
+# ------------------------------------------------- prefix-cache poison guard
+
+def test_rejected_drafts_cannot_poison_prefix_cache(rng):
+    """Regression: a warm prefix hit must never serve KV written for a
+    rejected draft.  Request A decodes with every draft rejected (max
+    junk written beyond the accepted frontier), its output extension is
+    inserted into the radix cache at finish; request B's prompt extends
+    A's accepted stream and takes a multi-block warm hit over exactly
+    those blocks.  B's output must match a cold, spec-free engine."""
+    cfg = _smoke_cfg("yi-6b")
+    params, _ = zoo.init(cfg, jax.random.key(0))
+    p1 = rng.integers(0, cfg.vocab_size, 26).astype(np.int32)
+    ref1, _ = _run(cfg, params, [p1], kv_mode="paged", max_new=8)
+    bad = {0: [(t + 1) % cfg.vocab_size for t in ref1[0]]}
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      enable_smartconf=False, prefill_mode="packed",
+                      kv_mode="paged", prefix_cache=True, spec_depth=4)
+    eng._drafter = OracleDrafter(bad, cfg.vocab_size)
+    eng.submit(Request(0, p1, 8))
+    ticks = 0
+    while len(eng.finished) < 1 and ticks < 200:
+        eng.tick()
+        ticks += 1
+    assert eng.spec_proposed > 0 and eng.spec_accepted == 0
+    gen1 = list(eng.finished[0].generated)
+    assert gen1 == ref1[0]
+    # B extends A's prompt + accepted output: 26 + 7 = 33 tokens, so the
+    # warm hit spans 2 full blocks — the second one exists ONLY via the
+    # output-extension insert, i.e. KV written while drafts were in flight
+    p2 = np.concatenate([p1, np.asarray(gen1[:7], np.int32)])
+    eng._drafter = NGramDrafter()
+    eng.submit(Request(1, p2, 8))
+    ticks = 0
+    while len(eng.finished) < 2 and ticks < 200:
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 2
+    warm = next(r for r in eng.finished if r.req_id == 1)
+    assert warm.prefix_hit > 16, "extension blocks should serve the hit"
+    eng.close()
+    ref2, _ = _run(cfg, params, [p2], kv_mode="paged", max_new=8)
+    assert list(warm.generated) == ref2[0], "poisoned KV behind a warm hit"
+
+
+# ------------------------------------------------------- telemetry and chaos
+
+def test_spec_telemetry_counters_and_audit(markov):
+    from repro.core.telemetry import Telemetry
+
+    cfg, params = markov
+    tel = Telemetry(enabled=True)
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      prefill_mode="packed", spec_depth=2, telemetry=tel)
+    eng.submit(Request(0, np.tile(np.arange(8, dtype=np.int32), 3), 16))
+    ticks = 0
+    last = {}
+    while len(eng.finished) < 1 and ticks < 200:
+        last = eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 1
+    assert tel.metrics.counter("serve.spec.proposed").value == eng.spec_proposed > 0
+    assert tel.metrics.counter("serve.spec.accepted").value == eng.spec_accepted > 0
+    assert tel.metrics.histogram("serve.spec.accepted_len").mean() > 0
+    # per-tick stats carry the live knob and sensor values
+    assert last["spec_depth"] == eng.spec_depth
+    assert 0.0 <= last["accept_rate"] <= 1.0
+    # every depth actuation left a Decision in the audit trail
+    des = tel.audit.query(conf="serve.spec_depth")
+    assert des and all(d.metric == "accept_rate" and d.sane for d in des)
+    eng.close()
+
+
+def test_spec_chaos_nan_accept_rate(markov):
+    """A NaN accept-rate window with speculation live: the guardrails
+    eat the insane readings (sensor_faults counts them), the knob pins
+    to last-known-good, every request still finishes token-correct."""
+    cfg, params = markov
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=96,
+                      prefill_mode="packed", spec_depth=2)
+    chaos = ChaosMonkey(ChaosSpec(
+        seed=0, sensor_fault_tick=2, sensor_fault_ticks=10,
+        sensor_fault_mode="nan",
+        sensor_names=("accept_rate",))).install(eng)
+    prompt = np.tile(np.arange(8, dtype=np.int32), 3)
+    for i in range(3):
+        eng.submit(Request(i, prompt, 16))
+    ticks = 0
+    while len(eng.finished) < 3 and ticks < 400:
+        chaos(None, ticks)
+        eng.tick()
+        ticks += 1
+    assert len(eng.finished) == 3
+    want = [(24 + i) % 8 for i in range(16)]
+    assert all(list(r.generated) == want for r in eng.finished)
+    assert eng.sc_spec.sensor_faults > 0, "the NaN window was never sensed"
+    assert any(n.startswith("sensor_nan:accept_rate")
+               for _, n in chaos.events)
+    assert 1 <= eng.spec_depth <= eng.spec_depth_max
+    eng.close()
