@@ -267,6 +267,156 @@ def _spec_rows(cfg, params, horizon_s: float) -> list[str]:
     return rows
 
 
+# ---- replica-router sweep: adaptive weights vs static splits -------------
+# The route.replica_weights analogue of the admission story: two
+# data-parallel replicas behind one ReplicaRouter, and a *skewed* fault —
+# in the storm half replica 1 only gets every third tick (a straggler
+# co-tenant), plus a mid-calm preemption of the same replica and a NaN
+# window on the router's weight sensor for it.  Weighted-least-loaded
+# dispatch equalizes ``backlog / weight``; what goodput-under-SLO needs is
+# equalized *delay*, which requires weighting by effective service rate —
+# exactly what each replica's TTFT-p99 controller discovers.  Every static
+# split loses one side of the shift: ``equal`` keeps half the backlog on a
+# replica serving it at a third the rate all storm long, ``favor0``
+# overloads replica 0 during the calm half it should be sharing, and
+# ``favor1`` leans into the straggler.  The adaptive weights ride it —
+# symmetric while both replicas hold the SLO, shed the straggler's weight
+# the moment its TTFT-p99 crosses the goal, recover when the stall clears.
+ROUTER_CALM_RPS = 36.0
+ROUTER_STORM_RPS = 50.0
+ROUTER_STALL_PERIOD = 4          # storm: replica 1 runs 1 tick in 4
+ROUTER_SPLITS = {"equal": (1.0, 1.0), "favor0": (3.0, 1.0),
+                 "favor1": (1.0, 3.0)}
+
+
+def _router_trace(horizon_s: float):
+    from repro.serve import TraceConfig, concat_traces, synthesize_trace
+    half = horizon_s / 2.0
+    shape = dict(prompt_lo=4, prompt_hi=24, prompt_alpha=1.3,
+                 new_lo=2, new_hi=8, new_alpha=1.6, tiers=_tiers())
+    calm = TraceConfig(process="poisson", rate_rps=ROUTER_CALM_RPS,
+                       horizon_s=half, seed=31, **shape)
+    storm = TraceConfig(process="bursty", rate_rps=ROUTER_STORM_RPS,
+                        horizon_s=half, t_start=half, seed=37,
+                        burst_factor=2.0, burst_period_s=half / 2.0,
+                        burst_duty=0.5, **shape)
+    return concat_traces(synthesize_trace(calm), synthesize_trace(storm))
+
+
+def _run_router_policy(cfg, params, trace, horizon_s: float, *,
+                       adaptive: bool, weights=None,
+                       telemetry_dir: str | None = None) -> dict:
+    from repro.core.telemetry import Telemetry
+    from repro.serve import (ChaosMonkey, ChaosSpec, OpenLoopDriver,
+                             ReplicaRouter, SLOSpec, ServeEngine,
+                             ServeOptions, TickCostModel, VirtualClock,
+                             as_requests)
+
+    arrivals = as_requests(trace, vocab=cfg.vocab_size, seed=1)
+    vc = VirtualClock()
+    tel = Telemetry(enabled=True, clock=vc) if telemetry_dir else None
+    slo = SLOSpec(ttft_s=TTFT_SLO_S, window=24)
+    # engine-level SmartConf off: the four policies differ ONLY in how the
+    # router weights the replicas, so the margin is attributable
+    engines = [ServeEngine(cfg, params, options=ServeOptions(
+        max_batch=MAX_BATCH, cache_len=CACHE_LEN, block_tokens=16,
+        enable_smartconf=False, prefill_mode="packed", slo=slo,
+        num_tiers=NUM_TIERS), clock=vc) for _ in range(2)]
+    half = horizon_s / 2.0
+
+    def stall(tick):
+        # the skewed fault: replica 1 is a straggler all storm long
+        if vc.now >= half and tick % ROUTER_STALL_PERIOD:
+            return 1
+        return None
+
+    rt = ReplicaRouter(engines, clock=vc, slo=slo, adaptive=adaptive,
+                       weights=weights, telemetry=tel, stall=stall)
+    m_eng = ChaosMonkey(ChaosSpec(
+        seed=5, slow_tick_prob=0.03, slow_tick_s=0.1,
+        preempt_tick=12, preempt_resume_ticks=3)).install(engines[1])
+    m_rt = ChaosMonkey(ChaosSpec(
+        seed=7, sensor_fault_tick=40, sensor_fault_ticks=10,
+        sensor_fault_mode="nan",
+        sensor_names=("route.replica1.ttft_p99_s",))).install(rt)
+    drv = OpenLoopDriver(
+        rt, arrivals, clock=vc,
+        cost=TickCostModel(base_s=0.02, prefill_token_s=1e-3,
+                           decode_token_s=8e-3),
+        chaos=lambda d, t: m_eng(d, t) + m_rt(d, t),
+        drain_s=max(t.deadline_s or 0.0 for t in _tiers()) + 8.0)
+    out = drv.run()
+    out["chaos_events"] = len(m_eng.events) + len(m_rt.events)
+    out["sensor_faults"] = rt.sensor_faults
+    out["final_weights"] = [round(w, 2) for w in rt.weights]
+    out["reroutes"] = rt.reroutes
+    out["stalled_ticks"] = rt.stalled_ticks
+    if tel is not None:
+        out["telemetry_paths"] = tel.write(telemetry_dir)
+    rt.close()
+    return out
+
+
+def _router_rows(cfg, params, horizon_s: float) -> list[str]:
+    import json
+    import os
+
+    tel_dir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "slo_router_telemetry")
+    trace = _router_trace(horizon_s)
+    res = {"adaptive": _run_router_policy(cfg, params, trace, horizon_s,
+                                          adaptive=True,
+                                          telemetry_dir=tel_dir)}
+    for name, w in ROUTER_SPLITS.items():
+        res[f"static_{name}"] = _run_router_policy(
+            cfg, params, trace, horizon_s, adaptive=False, weights=w)
+
+    rows = []
+    for name, r in res.items():
+        rows.append(fmt_row(
+            f"slo_router_{name}", 0.0,
+            f"goodput_tps={r['goodput_tps']:.2f} "
+            f"throughput_tps={r['throughput_tps']:.2f} "
+            f"finished={r['finished']} rejected={r['rejected']} "
+            f"reroutes={r['reroutes']} stalled_ticks={r['stalled_ticks']} "
+            f"weights={r['final_weights']} "
+            f"chaos_events={r['chaos_events']} "
+            f"sensor_faults={r['sensor_faults']} "
+            f"unhandled={len(r['unhandled'])}"))
+        assert r["unhandled"] == [], \
+            f"slo_router_{name}: unhandled under chaos: {r['unhandled']}"
+        assert r["chaos_events"] > 0, \
+            f"slo_router_{name}: chaos schedule never fired"
+        assert r["stalled_ticks"] > 0, \
+            f"slo_router_{name}: the straggler stall never engaged"
+    ad = res["adaptive"]
+    assert ad["sensor_faults"] > 0, \
+        "router NaN window never reached a weight controller"
+    for name in ROUTER_SPLITS:
+        r = res[f"static_{name}"]
+        assert ad["goodput_tps"] > r["goodput_tps"], (
+            f"adaptive router goodput {ad['goodput_tps']:.2f} tok/s not "
+            f"above static_{name} ({r['goodput_tps']:.2f} tok/s)")
+    # weight Decisions — asserted from the *written* audit trail
+    with open(ad["telemetry_paths"]["audit"]) as fh:
+        audit = [json.loads(line) for line in fh]
+    wdec = [d for d in audit if d["conf"].startswith("route.replica_weights")]
+    assert wdec, "no route.replica_weights Decisions in audit.jsonl"
+    fallback = [d for d in wdec if d["fallback"]]
+    assert fallback, ("router NaN window never engaged last-known-good "
+                      "fallback on a weight controller")
+    best_name, best = max(
+        ((n, r) for n, r in res.items() if n != "adaptive"),
+        key=lambda nr: nr[1]["goodput_tps"])
+    rows.append(fmt_row(
+        "slo_router_adaptive_vs_best_static", 0.0,
+        f"adaptive={ad['goodput_tps']:.2f}tps "
+        f"best_static={best['goodput_tps']:.2f}tps({best_name}) "
+        f"margin={ad['goodput_tps'] / max(best['goodput_tps'], 1e-9):.2f}x "
+        f"weight_decisions={len(wdec)} fallback_decisions={len(fallback)}"))
+    return rows
+
+
 # a chaos fault at tick T must have a controller Decision recorded within
 # [T, T + window]: decisions land every non-drain tick, and the worker
 # preemption drains for preempt_resume_ticks=3 ticks, so 6 covers the
@@ -375,6 +525,9 @@ def run(smoke: bool = False) -> list[str]:
 
     # ---- speculation-depth sweep (same chaos schedule, markov regime) ----
     rows.extend(_spec_rows(cfg, params, horizon_s))
+
+    # ---- replica-router sweep (skewed straggler chaos, adaptive weights) --
+    rows.extend(_router_rows(cfg, params, horizon_s))
 
     # ---- flight-recorder gates (asserted from the written artifacts) ----
     rows.append(fmt_row("slo_telemetry", 0.0, _assert_telemetry(res)))

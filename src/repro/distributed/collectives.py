@@ -1,4 +1,4 @@
-"""Distributed-optimization collectives.
+"""Distributed-optimization collectives + serving tensor-parallel wrappers.
 
 * :func:`compressed_psum_grads` — int8 block-quantized gradient all-reduce
   via ``shard_map`` (quantize -> psum int32 -> dequantize), with optional
@@ -8,15 +8,31 @@
   attention (o_i, m_i, l_i): the sequence-parallel KV path (DESIGN.md §6);
   math matches the Pallas decode kernel's scratch accumulators, so a shard's
   kernel output feeds this directly.
+* :func:`tp_segment_attention` / :func:`tp_paged_segment_attention` — the
+  serve engine's head-sharded segment-attention: the fused kernels run
+  per-shard over a contiguous head chunk on the ``model`` axis, the [P,H,D]
+  output is all-gathered back INSIDE the shard body (pure data movement —
+  no psum over a contraction — so the result is bit-identical to the
+  single-device op), and everything downstream runs replicated.  Falls back
+  to the plain op when no serving mesh is active or the head counts do not
+  divide the model axis (e.g. MQA kv_heads=1).
+
+``shard_map`` is imported through :mod:`repro.distributed.sharding`'s one
+version-compat alias (jax moved it out of experimental around 0.4.35) —
+do not duplicate the fallback here.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sharding import current_mesh, shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_grads",
-           "sp_decode_combine"]
+           "sp_decode_combine", "tp_segment_attention",
+           "tp_paged_segment_attention"]
 
 _BLOCK = 128
 
@@ -67,6 +83,81 @@ def compressed_psum_grads(grads, axis_name: str):
         return mean.astype(g.dtype)
 
     return jax.tree.map(one, grads)
+
+
+def _serve_tp_mesh(heads: int, kv_heads: int):
+    """The active mesh iff serving TP applies to this op's head counts.
+
+    Requires a live ``use_mesh`` context with a non-trivial ``model`` axis
+    that divides BOTH head counts — contiguous head chunks then preserve the
+    GQA group mapping (local ``h // (H_loc/Kv_loc)`` equals the global
+    grouping), so the per-shard op is the single-device math on a head
+    slice.  Anything else returns None and the caller runs unsharded."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    s = mesh.shape["model"]
+    if s <= 1 or heads % s or kv_heads % s:
+        return None
+    return mesh
+
+
+def tp_segment_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                         window: int = 0):
+    """Head-sharded flat segment attention: q [P,H,D]; k,v [N,Kv,D].
+
+    Per-shard the fused op sees a contiguous head chunk [P,H/s,D] x
+    [N,Kv/s,D]; the all-gather over ``model`` (axis 1, inside the body)
+    rebuilds the full [P,H,D] output on every shard.  ``check_rep=False``:
+    Pallas calls carry no replication rule, and the ``data`` axis is
+    untouched (all in_specs leave it out, so inputs and output are
+    replicated over it by construction)."""
+    from repro.kernels.segment_attention import segment_attention_op
+    mesh = _serve_tp_mesh(q.shape[1], k.shape[1])
+    if mesh is None:
+        return segment_attention_op(q, k, v, q_pos, k_pos, q_seg, k_seg,
+                                    window=window)
+
+    def body(q_l, k_l, v_l, qp, kp, qs, ks):
+        o = segment_attention_op(q_l, k_l, v_l, qp, kp, qs, ks,
+                                 window=window)
+        return jax.lax.all_gather(o, "model", axis=1, tiled=True)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model", None),
+                  P(None, "model", None), P(None), P(None), P(None),
+                  P(None)),
+        out_specs=P(None, None, None),
+        check_rep=False)(q, k, v, q_pos, k_pos, q_seg, k_seg)
+
+
+def tp_paged_segment_attention(q, k_store, v_store, block_tables, q_pos,
+                               q_seg, *, window: int = 0):
+    """Head-sharded paged segment attention: q [P,H,D]; stores [N,Kv,T,D].
+
+    The block stores shard on the ``Kv`` head dim (axis 1) — the same
+    placement the engine pins on the cache arrays, so the gather through
+    the block table stays shard-local.  Block *indices* (tables, positions,
+    segments) are global and replicated."""
+    from repro.kernels.segment_attention import paged_segment_attention_op
+    mesh = _serve_tp_mesh(q.shape[1], k_store.shape[1])
+    if mesh is None:
+        return paged_segment_attention_op(q, k_store, v_store, block_tables,
+                                          q_pos, q_seg, window=window)
+
+    def body(q_l, k_l, v_l, bt, qp, qs):
+        o = paged_segment_attention_op(q_l, k_l, v_l, bt, qp, qs,
+                                       window=window)
+        return jax.lax.all_gather(o, "model", axis=1, tiled=True)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model", None, None),
+                  P(None, "model", None, None), P(None, None), P(None),
+                  P(None)),
+        out_specs=P(None, None, None),
+        check_rep=False)(q, k_store, v_store, block_tables, q_pos, q_seg)
 
 
 def sp_decode_combine(o: jax.Array, m: jax.Array, l: jax.Array,

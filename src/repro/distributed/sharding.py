@@ -24,9 +24,9 @@ else:  # pragma: no cover - exercised on older jax only
     from jax.experimental.shard_map import shard_map
 
 __all__ = [
-    "AxisRules", "DEFAULT_RULES", "use_mesh", "current_mesh", "logical_spec",
-    "shard", "params_pspecs", "named_sharding", "FSDP_THRESHOLD", "Axes", "A",
-    "shard_map",
+    "AxisRules", "DEFAULT_RULES", "SERVE_TP_RULES", "use_mesh",
+    "current_mesh", "logical_spec", "shard", "params_pspecs",
+    "named_sharding", "FSDP_THRESHOLD", "Axes", "A", "shard_map",
 ]
 
 
@@ -63,6 +63,22 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
 }
 
 FSDP_THRESHOLD = 2**20  # params larger than 1M elements get FSDP sharding
+
+# Serving tensor-parallel rule overlay: ONLY the attention-head family (and
+# MoE experts) shards over the model axis.  Training's default rules also
+# split ff/vocab, which changes matmul contraction order (psum of partials)
+# and therefore bits; the serve engine's contract is token-identity with
+# single-device, so everything except head-parallel attention + EP MoE stays
+# replicated and the per-head math is bit-for-bit the single-device program.
+SERVE_TP_RULES: dict[str, tuple[str, ...]] = {
+    "batch": (),
+    "kv_seq": (),
+    "ff": (),
+    "vocab": (),
+    "moe_ff": (),
+    "fsdp": (),
+    "ctl": (),
+}
 
 
 class _Ctx(threading.local):

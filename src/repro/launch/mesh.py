@@ -20,8 +20,33 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):
-    """Small mesh over whatever local devices exist (tests/examples)."""
+    """Small mesh over whatever local devices exist (tests/examples).
+
+    Validates the shape against the visible device count instead of silently
+    building a degenerate mesh: ``model > len(jax.devices())`` used to floor
+    ``data`` to 0 and fail much later inside jax with an opaque shape error.
+    """
     n = len(jax.devices())
+    if model < 1:
+        raise ValueError(f"make_host_mesh: model={model} must be >= 1")
+    if model > n:
+        raise ValueError(
+            f"make_host_mesh: model={model} exceeds the {n} visible "
+            f"device(s); run under XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={model} (or more) or shrink the model axis")
     if data is None:
+        if n % model:
+            raise ValueError(
+                f"make_host_mesh: model={model} does not divide the {n} "
+                f"visible device(s) evenly; pass data= explicitly or pick "
+                f"a model size that divides {n}")
         data = n // model
+    if data < 1:
+        raise ValueError(f"make_host_mesh: data={data} must be >= 1")
+    if data * model > n:
+        raise ValueError(
+            f"make_host_mesh: mesh ({data}x{model}) needs {data * model} "
+            f"devices but only {n} are visible; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model} or "
+            f"shrink the mesh")
     return jax.make_mesh((data, model), ("data", "model"))

@@ -8,6 +8,7 @@ configs deploy the dry-run-validated shardings on real meshes).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -75,6 +76,22 @@ def main() -> None:
     ap.add_argument("--no-spec-adaptive", action="store_true",
                     help="pin serve.spec_depth at --spec-depth instead of "
                          "letting SmartConf actuate it")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data, model) host mesh, e.g. 2x4: "
+                         "the packed tick's one dispatch runs tensor-"
+                         "parallel over the model axis (attention heads "
+                         "and the KV block store shard on the Kv head "
+                         "dim), token-identical to single-device.  Needs "
+                         "packed prefill and data*model visible devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU); REPRO_SERVE_MESH sets the same "
+                         "knob from the environment")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --trace: run N data-parallel engine "
+                         "replicas behind one ReplicaRouter (weighted-"
+                         "least-loaded dispatch; with --ttft-slo-s the "
+                         "per-replica route.replica_weights are SmartConf-"
+                         "actuated on each replica's TTFT-p99)")
     ap.add_argument("--full-size", action="store_true")
     # open-loop trace mode (serve/README.md): arrivals at trace rate on a
     # virtual clock, tier gating + SLO accounting + optional fault injection
@@ -110,6 +127,9 @@ def main() -> None:
     weights = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                   for x in jax.tree.leaves(params))
     budget = int(weights + args.budget_headroom_mb * 1e6)
+    if args.replicas > 1 and args.trace is None:
+        raise SystemExit("--replicas N needs --trace: the ReplicaRouter "
+                         "serves an open-loop arrival stream")
     if args.trace is not None:
         _run_trace(cfg, params, budget, args)
         return
@@ -124,7 +144,7 @@ def main() -> None:
         kv_cache_share=args.kv_cache_share, telemetry=tel,
         spec_depth=args.spec_depth, spec_depth_max=args.spec_depth_max,
         spec_adaptive=not args.no_spec_adaptive,
-        accept_rate_goal=args.accept_rate_goal))
+        accept_rate_goal=args.accept_rate_goal, mesh=args.mesh))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 48)))
@@ -143,6 +163,9 @@ def main() -> None:
           f"pad_fraction {eng.pad_fraction:.2f}; "
           f"kv[{kv}] {eng.pool.used_blocks} blocks used, "
           f"{eng.preemptions} preemptions"
+          + (f"; mesh {args.mesh}: {eng.tp_shards}-way TP ticks, "
+             f"{eng.kv_shard_bytes()/1e6:.1f} MB KV per shard"
+             if eng.mesh is not None else "")
           + (f"; prefix cache {eng._prefix_cache.blocks_held} blocks held, "
              f"hit rate {eng._prefix_cache.hit_rate:.2f}, "
              f"{eng.prefix_hit_tokens_total} prefill tokens reclaimed, "
@@ -159,9 +182,10 @@ def main() -> None:
 
 
 def _run_trace(cfg, params, budget: int, args) -> None:
-    from repro.serve import (ChaosMonkey, ChaosSpec, OpenLoopDriver, SLOSpec,
-                             ServeEngine, TraceConfig, VirtualClock,
-                             as_requests, synthesize_trace)
+    from repro.serve import (ChaosMonkey, ChaosSpec, OpenLoopDriver,
+                             ReplicaRouter, SLOSpec, ServeEngine,
+                             TraceConfig, VirtualClock, as_requests,
+                             synthesize_trace)
 
     vc = VirtualClock()
     slo = SLOSpec(ttft_s=args.ttft_slo_s) if args.ttft_slo_s else None
@@ -169,26 +193,42 @@ def _run_trace(cfg, params, budget: int, args) -> None:
     if args.telemetry_dir:
         from repro.core.telemetry import Telemetry
         tel = Telemetry(enabled=True, clock=vc)  # virtual-time timestamps
-    eng = ServeEngine(cfg, params, options=ServeOptions(
+    opts = ServeOptions(
         max_batch=args.max_batch, cache_len=args.cache_len,
         hbm_budget_bytes=budget, prefill_mode=args.prefill_mode,
         kv_mode=args.kv_mode, prefix_cache=args.prefix_cache,
         kv_cache_share=args.kv_cache_share, slo=slo, telemetry=tel,
         spec_depth=args.spec_depth, spec_depth_max=args.spec_depth_max,
         spec_adaptive=not args.no_spec_adaptive,
-        accept_rate_goal=args.accept_rate_goal),
-        clock=vc)
+        accept_rate_goal=args.accept_rate_goal, mesh=args.mesh)
+    if args.replicas > 1:
+        # telemetry (and its decision audit) attaches to the router, which
+        # owns the fleet-level control loop; each replica keeps its own
+        # engine-level controllers
+        engines = [ServeEngine(
+            cfg, params,
+            options=opts if i == 0 else dataclasses.replace(
+                opts, telemetry=None), clock=vc)
+            for i in range(args.replicas)]
+        eng = ReplicaRouter(engines, clock=vc, slo=slo,
+                            adaptive=slo is not None, telemetry=tel)
+    else:
+        eng = ServeEngine(cfg, params, options=opts, clock=vc)
     trace = synthesize_trace(TraceConfig(
         process=args.trace, rate_rps=args.rate_rps,
         horizon_s=args.horizon_s, seed=args.seed,
         prefix_groups=args.prefix_groups, prefix_len=args.prefix_len))
     chaos = None
     if args.chaos:
+        # with replicas, the engine-level faults (budget cut, preemption,
+        # sensor window) all land on replica 0 — the router must route
+        # around them
+        target = eng.engines[0] if args.replicas > 1 else eng
         chaos = ChaosMonkey(ChaosSpec(
             seed=args.seed, slow_tick_prob=0.04, slow_tick_s=0.15,
             budget_cut_tick=30, budget_cut_frac=0.6, budget_restore_tick=60,
             sensor_fault_tick=40, sensor_fault_ticks=10,
-            preempt_tick=20, preempt_resume_ticks=3)).install(eng)
+            preempt_tick=20, preempt_resume_ticks=3)).install(target)
     drv = OpenLoopDriver(
         eng, as_requests(trace, vocab=cfg.vocab_size, seed=args.seed),
         clock=vc, chaos=chaos)
@@ -207,7 +247,11 @@ def _run_trace(cfg, params, budget: int, args) -> None:
           f"unhandled {len(out['unhandled'])}"
           + (f"; prefix cache hit rate {eng._prefix_cache.hit_rate:.2f}, "
              f"{eng.prefix_hit_tokens_total} prefill tokens reclaimed"
-             if eng._prefix_cache is not None else ""))
+             if getattr(eng, "_prefix_cache", None) is not None else "")
+          + (f"; {args.replicas} replicas: weights "
+             f"{[round(w, 2) for w in eng.weights]}, "
+             f"{eng.reroutes} rerouted on replica loss"
+             if args.replicas > 1 else ""))
     if tel is not None:
         paths = tel.write(args.telemetry_dir)
         print(f"telemetry: {paths['trace']} (open in https://ui.perfetto.dev), "

@@ -461,10 +461,10 @@ def block_apply_packed(cfg, kind: str, params: dict, x: jax.Array,
         # xla impl materializes the table-gathered view; the Pallas kernel
         # gathers blocks via scalar prefetch with the segment predicate
         # fused into the tile mask (key segment = table row).
-        from repro.kernels.segment_attention import paged_segment_attention_op
+        from repro.distributed.collectives import tp_paged_segment_attention
         new_cache = _paged_scatter(cache, k, v, pos2, valid, block_tables,
                                    seg=q_seg)
-        o = paged_segment_attention_op(
+        o = tp_paged_segment_attention(
             q[0], new_cache["k"], new_cache["v"], block_tables, pos,
             slot_id, window=window)[None].astype(q.dtype)
         x = x + layers.attn_output(params["attn"], o)

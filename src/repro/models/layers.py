@@ -264,8 +264,11 @@ def segment_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     runs an online softmax over K/V tiles with the same-segment / written /
     causal / window predicate fused into the tile mask, so the
     ``[B,H,P,N]`` score matrix never materializes."""
-    from repro.kernels.segment_attention import segment_attention_op
-    out = [segment_attention_op(q[i], k[i], v[i], q_pos[i], k_pos[i],
+    # routed through the serving TP wrapper: head-sharded under an active
+    # serve mesh (all-gathered back to the full head set in-body), the
+    # plain fused op otherwise — bit-identical either way
+    from repro.distributed.collectives import tp_segment_attention
+    out = [tp_segment_attention(q[i], k[i], v[i], q_pos[i], k_pos[i],
                                 q_seg[i], k_seg[i], window=window)
            for i in range(q.shape[0])]   # the packed stream is B == 1
     return jnp.stack(out).astype(q.dtype)

@@ -278,10 +278,16 @@ def moe_apply_ep(params: dict, x: jax.Array, cfg, *, return_aux: bool = False,
     mesh = current_mesh()
     if (mesh is None or "model" not in mesh.axis_names
             or cfg.num_experts % mesh.shape["model"]
-            or x.shape[0] % _dp_size(mesh)):
+            or (x.shape[0] % _dp_size(mesh) and x.shape[0] != 1)):
         return moe_apply(params, x, cfg, return_aux=return_aux, valid=valid)
     e_local = cfg.num_experts // mesh.shape["model"]
-    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if x.shape[0] % _dp_size(mesh):
+        # the serve engine's token-packed stream is one [1, P] batch row —
+        # indivisible by any real data axis, but EP still pays: replicate
+        # the tokens over the data axes and shard only the experts
+        dp_axes: tuple = ()
+    else:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
 
     if valid is None:

@@ -7,6 +7,8 @@ from .traffic import (OpenLoopDriver, TickCostModel, TierSpec, TraceConfig,
                       TraceEvent, VirtualClock, as_requests, concat_traces,
                       synthesize_trace)
 from .chaos import ChaosMonkey, ChaosSpec
+from .block_store import CacheShardingPlan, build_serve_mesh, parse_mesh_spec
+from .router import ReplicaRouter
 
 __all__ = ["Admission", "Request", "RejectReason", "SLOSpec", "ServeEngine",
            "ServeOptions", "TICK_STATS_KEYS",
@@ -15,4 +17,6 @@ __all__ = ["Admission", "Request", "RejectReason", "SLOSpec", "ServeEngine",
            "OpenLoopDriver", "TickCostModel", "TierSpec", "TraceConfig",
            "TraceEvent", "VirtualClock", "as_requests", "concat_traces",
            "synthesize_trace",
-           "ChaosMonkey", "ChaosSpec"]
+           "ChaosMonkey", "ChaosSpec",
+           "CacheShardingPlan", "ReplicaRouter", "build_serve_mesh",
+           "parse_mesh_spec"]

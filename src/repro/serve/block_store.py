@@ -1,0 +1,158 @@
+"""Sharded KV block store: mesh placement for the serve engine's caches.
+
+Layer 2 of mesh serving.  The engine's KV state — paged physical block
+stores ``[num_blocks, Kv, T, D]`` or dense per-slot rings ``[B, n, Kv, D]``
+— shards over the serving mesh's ``model`` axis on the **Kv head dim**, the
+same placement ``distributed.collectives.tp_paged_segment_attention`` pins
+on its store operands.  Everything that is not a K/V plane (dense ``pos``
+planes, recurrent scan state, token rings) replicates.
+
+Design rules this module owns:
+
+* **Host-side allocator stays device-count-agnostic.**  Block *indices*
+  (``PagedKVAllocator`` free lists, leases, block tables) are global
+  logical names; only the backing arrays shard.  Nothing in
+  ``serve/paging.py`` knows the mesh exists — per-device HBM is the global
+  ledger divided by the model-axis size (:meth:`CacheShardingPlan.
+  shard_bytes`), and ``serve.kv_block_budget`` actuation, COW copies, and
+  store resizes are plain global-index array ops that stay shard-local
+  because they never touch the Kv dim.
+* **Placement survives donation.**  The engine's step functions donate the
+  cache operand; without an explicit constraint XLA is free to hand the
+  output back with a different layout, silently turning every later tick
+  into a resharding copy.  :meth:`CacheShardingPlan.constrain` is applied
+  to the cache *outputs inside* each jitted step so the fixed placement is
+  part of the compiled program; :meth:`CacheShardingPlan.place` re-pins
+  after the two eager resize paths (budget shrink via ``jnp.take``, demand
+  grow via pad).
+* **Indivisible head counts replicate, never raise.**  A leaf whose Kv dim
+  the model axis does not divide (MQA ``kv_heads=1`` under ``model=4``)
+  gets a replicated spec; the attention wrappers make the matching per-op
+  fallback, so the engine still runs token-identically — just unsharded.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["parse_mesh_spec", "build_serve_mesh", "CacheShardingPlan"]
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """``"DxM"`` -> ``(data, model)``, e.g. ``"2x4"`` -> ``(2, 4)``."""
+    parts = str(spec).lower().replace(" ", "").split("x")
+    try:
+        if len(parts) != 2:
+            raise ValueError
+        data, model = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(
+            f"mesh spec {spec!r} is not 'DxM' (e.g. '2x4' = data=2, model=4)"
+        ) from None
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh spec {spec!r}: both axes must be >= 1")
+    return data, model
+
+
+def build_serve_mesh(spec: str, *, heads: int, kv_heads: int,
+                     prefill_impl: str, env_forced: bool):
+    """Resolve a ``"DxM"`` serving-mesh request into a live Mesh or None.
+
+    Serving TP rides the packed stream (the one compiled dispatch the
+    shard_map wraps) and needs the model axis to divide both head counts
+    (contiguous GQA-preserving head chunks).  An infeasible request raises
+    with the reason when the caller asked explicitly; when the environment
+    forced it (``REPRO_SERVE_MESH``, the CI leg sweeping every arch) the
+    engine degrades to single-device with a warning instead — provenance
+    recorded by ``ServeOptions.mesh_env_forced``."""
+    from repro.launch.mesh import make_host_mesh
+
+    data, model = parse_mesh_spec(spec)
+    problems = []
+    if prefill_impl != "packed":
+        problems.append(f"prefill_impl={prefill_impl!r} (TP ticks ride the "
+                        "packed stream)")
+    if model > 1 and (heads % model or kv_heads % model):
+        problems.append(f"model={model} does not divide heads={heads} / "
+                        f"kv_heads={kv_heads}")
+    n = len(jax.devices())
+    if data * model > n:
+        problems.append(f"mesh {data}x{model} needs {data * model} devices, "
+                        f"{n} visible (XLA_FLAGS=--xla_force_host_platform_"
+                        f"device_count={data * model})")
+    if problems:
+        if env_forced:
+            warnings.warn(
+                f"REPRO_SERVE_MESH={spec}: serving single-device instead — "
+                + "; ".join(problems), RuntimeWarning, stacklevel=2)
+            return None
+        raise ValueError(f"serve mesh {spec!r} is infeasible: "
+                         + "; ".join(problems))
+    return make_host_mesh(data=data, model=model)
+
+
+def _leaf_key(path) -> str | None:
+    last = path[-1]
+    return getattr(last, "key", None)
+
+
+class CacheShardingPlan:
+    """Per-leaf placement of an engine cache tree over the serving mesh.
+
+    K/V planes shard on the Kv head dim over ``model`` (paged stores
+    ``[N, Kv, T, D]`` at axis 1, group-stacked ``[G, N, Kv, T, D]`` at 2;
+    dense rings ``[B, n, Kv, D]`` at 2, stacked at 3); every other leaf
+    — and any Kv dim the axis does not divide — replicates."""
+
+    def __init__(self, mesh, *, paged: bool):
+        self.mesh = mesh
+        self.paged = paged
+        self.model_size = int(mesh.shape["model"])
+
+    def leaf_spec(self, path, leaf) -> P:
+        if _leaf_key(path) not in ("k", "v") or leaf.ndim not in (4, 5):
+            return P()
+        if self.paged:
+            ax = 1 if leaf.ndim == 4 else 2
+        else:
+            ax = 2 if leaf.ndim == 4 else 3
+        if leaf.shape[ax] % self.model_size:
+            return P()
+        parts = [None] * leaf.ndim
+        parts[ax] = "model"
+        return P(*parts)
+
+    def place(self, caches):
+        """Eagerly pin every leaf (host-side ``device_put``): initial
+        placement and the re-pin after eager store resizes."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, a: jax.device_put(
+                a, NamedSharding(self.mesh, self.leaf_spec(p, a))), caches)
+
+    def constrain(self, caches):
+        """In-graph constraint for the cache outputs of the jitted steps:
+        donation must hand buffers back in the SAME placement."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(self.mesh, self.leaf_spec(p, a))), caches)
+
+    def replicate(self, x):
+        """In-graph fully-replicated pin (token rings and other small
+        device state whose placement should not drift across ticks)."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P()))
+
+    def shard_bytes(self, caches) -> int:
+        """Per-device bytes of the cache tree under this plan.  For a paged
+        store (K/V planes only) ``shard_bytes * model_size`` equals the
+        single-device total exactly — the HBM gauge identity the mesh
+        tests pin."""
+        total = 0
+        for path, a in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            spec = self.leaf_spec(path, a)
+            denom = self.model_size if "model" in tuple(spec) else 1
+            total += int(a.size) * a.dtype.itemsize // denom
+        return total

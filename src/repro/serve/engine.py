@@ -120,8 +120,10 @@ from repro.core import (ControllerModel, GoalSpec, Guardrails, HBMAccountant,
 from repro.core.smartconf import ConfRegistry
 from repro.core.telemetry import Telemetry, Tracer
 from repro.distributed.fault_tolerance import PreemptionHandler
+from repro.distributed.sharding import SERVE_TP_RULES, use_mesh
 from repro.kernels.decode_attention import padded_cache_len
 from repro.models import zoo
+from .block_store import CacheShardingPlan, build_serve_mesh
 from .kv_cache import KVBlockPool, QUEUE_TOKEN_BYTES
 from .options import ServeOptions, SLOSpec
 from .paging import PagedKVAllocator
@@ -156,6 +158,10 @@ TICK_STATS_KEYS: tuple[str, ...] = (
     # added), and decoding slots (the per-tick KV-read unit now that one
     # slot can emit several tokens per dispatch)
     "spec_depth", "accept_rate", "spec_lanes", "decode_slots",
+    # appended (mesh-serving PR): model-axis shard count of this engine's
+    # tick dispatch (1 = single-device) — lets the router and the CI gates
+    # tell a TP tick from a plain one without poking engine internals
+    "tp_shards",
 )
 
 # rejections in one tick at or past this count dump the flight recorder:
@@ -358,6 +364,23 @@ class ServeEngine:
         self._accept_window: collections.deque[tuple[int, int]] = \
             collections.deque(maxlen=slo.window if slo is not None else 64)
 
+        # --------------------------------- mesh serving (TP packed ticks)
+        # the one compiled tick dispatch runs under shard_map on a
+        # (data, model) host mesh: attention heads + the block stores' Kv
+        # dim shard over `model`, everything else replicates (see
+        # block_store.CacheShardingPlan + distributed/collectives TP
+        # wrappers).  Infeasible explicit requests raise; env-forced ones
+        # (REPRO_SERVE_MESH, the CI leg) degrade to single-device loudly.
+        self.mesh = None
+        self._cache_plan = None
+        if opts.mesh is not None:
+            self.mesh = build_serve_mesh(
+                opts.mesh, heads=cfg.num_heads, kv_heads=cfg.num_kv_heads,
+                prefill_impl=self.prefill_impl,
+                env_forced=opts.mesh_env_forced)
+        self.tp_shards = (int(self.mesh.shape["model"])
+                          if self.mesh is not None else 1)
+
         self.accountant = HBMAccountant(budget_bytes=hbm_budget_bytes)
         weight_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
                            for x in jax.tree.leaves(params))
@@ -460,6 +483,22 @@ class ServeEngine:
         self.slot_pos = np.full((max_batch,), -1, np.int64)
         self._slot_tok = jnp.zeros((max_batch,), jnp.int32)
         self._gen_buf = jnp.zeros((max_batch, cache_len), jnp.int32)
+        if self.mesh is not None:
+            # pin the K/V planes on their Kv-dim model-axis placement once;
+            # the step fns re-assert it on their (donated) cache outputs so
+            # it survives every tick, and the eager resize paths re-place
+            self._cache_plan = CacheShardingPlan(self.mesh, paged=self.paged)
+            self.caches = self._cache_plan.place(self.caches)
+        plan = self._cache_plan
+
+        def _pin(c, tok, gbuf):
+            # inside-jit epilogue: cache placement survives donation, and
+            # the token rings stay replicated instead of drifting to
+            # whatever layout XLA picked this compile
+            if plan is None:
+                return c, tok, gbuf
+            return plan.constrain(c), plan.replicate(tok), \
+                plan.replicate(gbuf)
 
         def decode_fn(p, c, tok, pos, active, gbuf, gidx, bt):
             logits, c = zoo.decode_step(cfg, p, c, tok, pos, active=active,
@@ -468,6 +507,7 @@ class ServeEngine:
             tok = jnp.where(active, nxt, tok)
             gbuf = gbuf.at[jnp.arange(tok.shape[0]), gidx].set(
                 nxt, mode="drop")
+            c, tok, gbuf = _pin(c, tok, gbuf)
             return tok, c, gbuf
 
         def prefill_chunk_fn(p, c, tokens, start, lengths, done, tok, gbuf,
@@ -479,6 +519,7 @@ class ServeEngine:
             slot0 = jnp.where(done, 0, gbuf.shape[1])
             gbuf = gbuf.at[jnp.arange(tok.shape[0]), slot0].set(
                 first, mode="drop")
+            c, tok, gbuf = _pin(c, tok, gbuf)
             return c, tok, gbuf
 
         def step_unified_fn(p, c, tokens, slot_id, pos, start, seg_len,
@@ -496,6 +537,7 @@ class ServeEngine:
             tok = jnp.where(sample, nxt, tok)
             gbuf = gbuf.at[jnp.arange(tok.shape[0]), gidx].set(
                 nxt, mode="drop")
+            c, tok, gbuf = _pin(c, tok, gbuf)
             return c, tok, gbuf
 
         def step_spec_fn(p, c, tokens, slot_id, pos, start, seg_len, is_dec,
@@ -517,6 +559,7 @@ class ServeEngine:
             cols = jnp.where(write, gidx[:, None] + offs, gbuf.shape[1])
             gbuf = gbuf.at[rows[:, None], cols].set(toks, mode="drop")
             tok = jnp.where(sample, toks[rows, accept], tok)
+            c, tok, gbuf = _pin(c, tok, gbuf)
             return c, tok, gbuf, accept, toks
 
         def merge_fn(full, one, slot):
@@ -550,9 +593,12 @@ class ServeEngine:
         # COW resolution: whole-block device copies applied before a lease
         # writes into a block it shares with the prefix cache (pair lists
         # are padded to power-of-two lengths, so compiles stay O(log))
+        def copy_blocks_fn(c, s, d):
+            c = zoo.copy_paged_blocks(c, s, d)
+            return c if plan is None else plan.constrain(c)
+
         self._copy_blocks = jax.jit(
-            lambda c, s, d: zoo.copy_paged_blocks(c, s, d),
-            donate_argnums=(0,)) if self.paged else None
+            copy_blocks_fn, donate_argnums=(0,)) if self.paged else None
 
         # sensors (share the injected clock so tests can be deterministic).
         # tick_latency spans the WHOLE tick (admit + schedule + compute +
@@ -825,6 +871,17 @@ class ServeEngine:
     def hbm_bytes(self) -> int:
         return self.accountant.total()
 
+    def kv_shard_bytes(self) -> int:
+        """Per-device bytes of the resident KV cache tree — the mesh-aware
+        HBM gauge.  Without a mesh this is the whole tree; with one, the
+        K/V planes divide by the model-axis size, so for a paged store
+        (K/V planes only) ``kv_shard_bytes() * tp_shards`` reproduces the
+        single-device total exactly."""
+        if self._cache_plan is not None:
+            return self._cache_plan.shard_bytes(self.caches)
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.caches))
+
     @property
     def prefill_compiles(self) -> int:
         """Distinct prefill/packed-stream programs compiled so far: one per
@@ -848,6 +905,17 @@ class ServeEngine:
 
     # ------------------------------------------------------------- one tick
     def tick(self) -> dict:
+        if self.mesh is None:
+            return self._tick_impl()
+        # the serving mesh + rule overlay are active for the WHOLE tick:
+        # every trace made this tick (step fns, COW copies, resizes) sees
+        # current_mesh(), so the attention wrappers engage shard_map and
+        # only head-parallel work shards (SERVE_TP_RULES nulls the
+        # training-only ff/vocab rules that would change contraction order)
+        with use_mesh(self.mesh, rules=SERVE_TP_RULES, fsdp=False):
+            return self._tick_impl()
+
+    def _tick_impl(self) -> dict:
         t0 = self.clock()
         self._tick_issued = self._tick_live = 0
         self._tick_packed_segments = 0
@@ -964,6 +1032,8 @@ class ServeEngine:
                             if self._tick_spec_proposed else 0.0),
             "spec_lanes": self._tick_spec_lanes,
             "decode_slots": self._tick_decode_slots,
+            # mesh-serving sensor: model-axis shards behind this tick
+            "tp_shards": self.tp_shards,
         }
 
     def run(self, ticks: int) -> list[dict]:
@@ -1351,6 +1421,10 @@ class ServeEngine:
             keep = jnp.asarray(self.pool.compact(target))
             self.caches = zoo.map_paged_caches(
                 self.caches, lambda a, ax: jnp.take(a, keep, axis=ax))
+            if self._cache_plan is not None:
+                # the eager gather re-laid the stores out; re-pin the Kv-dim
+                # placement before the next compiled tick consumes them
+                self.caches = self._cache_plan.place(self.caches)
             for reqs in (self.prefilling, self.running):
                 for slot, req in reqs.items():
                     self._bt_np[slot] = req.lease.table_row()
@@ -1378,6 +1452,8 @@ class ServeEngine:
             return jnp.concatenate([a, jnp.zeros(shape, a.dtype)], axis=ax)
 
         self.caches = zoo.map_paged_caches(self.caches, pad)
+        if self._cache_plan is not None:
+            self.caches = self._cache_plan.place(self.caches)
         return True
 
     def _preempt_lowest_priority(self) -> None:
@@ -1454,6 +1530,28 @@ class ServeEngine:
         """Requests parked by a drain (queued + waiting, admission order):
         what a replacement worker resubmits after an elastic restart."""
         return list(self.queued) + list(self.waiting)
+
+    @property
+    def accepting(self) -> bool:
+        """Whether ``submit`` would pass the drain gate right now: False
+        from the preemption trigger until the first post-recovery tick
+        clears the drain.  The replica router dispatches only to accepting
+        engines, so a request is never burned on the typed ``draining``
+        rejection another replica could have served."""
+        return not (self._draining or self.preemption.triggered)
+
+    def take_drained(self) -> list[Request]:
+        """Hand off every parked request: the returned requests leave this
+        engine's queues AND its memory ledger entirely.  The replica
+        router calls this on a preempted replica after its drain tick —
+        survivors resubmit the work, so a later rejoin of this engine must
+        not also serve it (``drained_requests`` alone would double-serve)."""
+        out = self.drained_requests()
+        self.queued.clear()
+        self.waiting.clear()
+        self.queued_tokens = 0
+        self.accountant.set("queue", 0)
+        return out
 
     # ------------------------------------------------------------- prefill
     def _prefill_tick(self) -> None:

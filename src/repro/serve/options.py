@@ -75,6 +75,11 @@ class ServeOptions:
     spec_depth_max: int = 8             # conf_max for sc_spec (<= 15)
     spec_adaptive: bool = True          # sc_spec actuates serve.spec_depth
     accept_rate_goal: float = 0.5       # sc_spec setpoint (direction="lower")
+    # --- mesh serving (tensor-parallel packed ticks + replica router) ---
+    mesh: str | None = None             # "DxM" host mesh, e.g. "2x4"; None = off
+    replicas: int = 1                   # data-parallel engines behind the router
+    router_adaptive: bool = True        # SmartConf-actuate route.replica_weights
+    router_weight_max: float = 8.0      # conf_max for each weight controller
     # --- hooks ---
     sensor_tap: Callable[[str, float], float] | None = None
     telemetry: "Telemetry | None" = None
@@ -82,6 +87,7 @@ class ServeOptions:
     prefill_env_forced: bool = False
     telemetry_env: bool = False
     spec_env_forced: bool = False
+    mesh_env_forced: bool = False
 
     def resolve(self, env=os.environ) -> "ServeOptions":
         """The single environment-resolution point.
@@ -97,7 +103,12 @@ class ServeOptions:
         int) force-enables speculative decode at that depth when the caller
         left ``spec_depth=0`` (the CI spec leg); ``spec_env_forced`` records
         the provenance so the engine silently degrades to k=0 on engines
-        that cannot speculate instead of raising."""
+        that cannot speculate instead of raising.  ``REPRO_SERVE_MESH``
+        (``"DxM"``, e.g. ``2x4``) requests a tensor-parallel serving mesh
+        when the caller left ``mesh=None`` (the CI mesh-serve leg);
+        ``mesh_env_forced`` records the provenance so engines that cannot
+        shard (legacy prefill, too few devices, indivisible heads) degrade
+        to single-device instead of raising."""
         # idempotent: the engine resolves whatever it is handed, so a
         # caller-resolved options object must keep its *_env* outputs
         pm = self.prefill_mode
@@ -115,7 +126,13 @@ class ServeOptions:
             e = env.get("REPRO_SPEC_DEPTH", "").strip()
             if e and e != "0":
                 sd, sd_forced = int(e), True
+        mesh, mesh_forced = self.mesh, self.mesh_env_forced
+        if mesh is None:
+            e = env.get("REPRO_SERVE_MESH", "").strip()
+            if e and e != "0":
+                mesh, mesh_forced = e, True
         return dataclasses.replace(self, prefill_mode=pm,
                                    prefill_env_forced=forced,
                                    telemetry_env=tel_env,
-                                   spec_depth=sd, spec_env_forced=sd_forced)
+                                   spec_depth=sd, spec_env_forced=sd_forced,
+                                   mesh=mesh, mesh_env_forced=mesh_forced)
